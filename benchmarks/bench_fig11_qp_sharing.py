@@ -1,0 +1,23 @@
+"""Paper Fig. 11: QP sharing — lock + atomic depth contention serializes
+posts; the NIC parallelism goes unused."""
+
+from repro.core import build_qp_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+
+def main():
+    for ways in (1, 2, 4, 8, 16):
+        m = build_qp_shared(16, ways)
+        for label, feats in [
+                ("all", ALL_FEATURES),
+                ("all_wo_postlist", ALL_FEATURES.without("postlist")),
+                ("all_wo_unsignaled", ALL_FEATURES.without("unsignaled"))]:
+            r = message_rate(m, features=feats, msgs_per_thread=2048)
+            row(f"fig11_qp{ways}way_{label}", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s|qps={m.usage.qps}")
+
+
+if __name__ == "__main__":
+    main()

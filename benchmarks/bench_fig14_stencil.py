@@ -1,0 +1,53 @@
+"""Paper Fig. 14: 5-point stencil halo exchange across hybrid rank/thread
+splits (16.1 / 4.4 / 1.16) x endpoint categories.
+
+The stencil compute runs for real in JAX (1-D partitioned grid, jnp.roll
+halo semantics); the halo messages per iteration are 2 per rank boundary
+(the paper's footnote: intranode IB still crosses the NIC), and their cost
+comes from the calibrated ibsim with the hybrid endpoint layout
+(per-rank CTX sets via build_hybrid)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Category, paper_categories
+from repro.core.endpoints import build_hybrid
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import CONSERVATIVE
+from benchmarks.common import row, timed
+
+GRID = 1024
+SPLITS = [(16, 1), (4, 4), (1, 16)]
+
+
+def _stencil_pass():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (GRID, GRID), jnp.float32)
+
+    @jax.jit
+    def step(g):
+        return 0.25 * (jnp.roll(g, 1, 0) + jnp.roll(g, -1, 0)
+                       + jnp.roll(g, 1, 1) + jnp.roll(g, -1, 1)) - g
+
+    out = step(g)
+    return float(jnp.sum(out))
+
+
+def main():
+    _, dt = timed(_stencil_pass, repeat=2)
+    row("fig14_stencil_compute", dt * 1e6, f"grid={GRID}")
+
+    for cat in paper_categories():
+        for p, t in SPLITS:
+            m = build_hybrid(p, t, cat)
+            r = message_rate(m, features=CONSERVATIVE, msgs_per_thread=2048)
+            u = m.usage
+            # messages per stencil iteration: 2 per rank (both neighbors)
+            msgs_per_iter = 2 * p
+            row(f"fig14_{cat.value}_{p}.{t}", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s|msgs/iter={msgs_per_iter}"
+                f"|qps={u.qps}|cqs={u.cqs}|uars={u.uars}|uuars={u.uuars}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Fig. 2: the two extremes — per-thread dedicated endpoints vs one
+shared endpoint: throughput and wasted hardware resources."""
+
+from repro.core import Category, EndpointModel
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+
+def main():
+    for cat in (Category.MPI_EVERYWHERE, Category.MPI_THREADS):
+        for t in (1, 2, 4, 8, 16):
+            m = EndpointModel.build(cat, t)
+            r = message_rate(m, features=ALL_FEATURES, msgs_per_thread=2048)
+            row(f"fig2_{cat.value}_{t}threads", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s|wasted_uuars={m.usage.uuars_wasted}"
+                f"|waste={m.usage.waste_fraction * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 3: naive TD-per-CTX endpoints — throughput across feature
+ablations (left) and resource usage growth (right)."""
+
+from repro.core import build_ctx_shared, naive_td_per_ctx_usage
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+FEATURES = ["all", "postlist", "unsignaled", "inline", "blueflame"]
+
+
+def main():
+    for t in (1, 2, 4, 8, 16):
+        m = build_ctx_shared(t, 1)        # one CTX per thread, TD inside
+        for f in FEATURES:
+            feats = ALL_FEATURES if f == "all" else ALL_FEATURES.without(f)
+            r = message_rate(m, features=feats, msgs_per_thread=2048)
+            row(f"fig3_{t}threads_all_wo_{f}" if f != "all"
+                else f"fig3_{t}threads_all",
+                1.0 / r.rate_mmps, f"{r.rate_mmps:.1f}Mmsgs/s")
+        u = naive_td_per_ctx_usage(t)
+        row(f"fig3_{t}threads_resources", 0.0,
+            f"qps={u.qps}|cqs={u.cqs}|uars={u.uars}|uuars={u.uuars}"
+            f"|sw_mem_kb={u.sw_memory_bytes // 1024}")
+
+
+if __name__ == "__main__":
+    main()

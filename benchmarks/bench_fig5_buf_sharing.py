@@ -1,0 +1,23 @@
+"""Paper Fig. 5: BUF sharing — hurts only when the NIC DMA-reads the
+payload (no Inlining), via TLB-rail serialization on the shared line."""
+
+from repro.core import build_ctx_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES, BufferConfig
+from benchmarks.common import row
+
+
+def main():
+    m = build_ctx_shared(16, 1)
+    for ways in (1, 2, 4, 8, 16):
+        bufs = BufferConfig.shared(16, ways)
+        for label, feats in [("all", ALL_FEATURES),
+                             ("all_wo_inline", ALL_FEATURES.without("inline"))]:
+            r = message_rate(m, features=feats, buffers=bufs,
+                             msgs_per_thread=2048)
+            row(f"fig5_buf{ways}way_{label}", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s")
+
+
+if __name__ == "__main__":
+    main()

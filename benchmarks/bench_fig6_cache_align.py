@@ -1,0 +1,21 @@
+"""Paper Fig. 6: independent 2-byte buffers with and without 64-byte cache
+alignment (unaligned buffers land on one line -> serialized DMA reads)."""
+
+from repro.core import build_ctx_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES, BufferConfig
+from benchmarks.common import row
+
+
+def main():
+    m = build_ctx_shared(16, 1)
+    feats = ALL_FEATURES.without("inline")
+    for label, bufs in [("aligned", BufferConfig.aligned(16)),
+                        ("unaligned", BufferConfig.unaligned(16, 2))]:
+        r = message_rate(m, features=feats, buffers=bufs,
+                         msgs_per_thread=2048)
+        row(f"fig6_{label}", 1.0 / r.rate_mmps, f"{r.rate_mmps:.1f}Mmsgs/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig. 7: CTX sharing — flat with Postlist; without Postlist the
+contiguous-UAR BlueFlame anomaly bites at 16-way ("2xQPs" recovers it,
+"Sharing 2" shows the UAR-sharing penalty)."""
+
+from repro.core import TDSharing, build_ctx_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+
+def main():
+    fwp = ALL_FEATURES.without("postlist")
+    for ways in (1, 2, 4, 8, 16):
+        variants = [
+            ("all", build_ctx_shared(16, ways), ALL_FEATURES),
+            ("all_wo_postlist", build_ctx_shared(16, ways), fwp),
+            ("all_wo_postlist_2xqps",
+             build_ctx_shared(16, ways, two_x=True), fwp),
+            ("all_wo_postlist_sharing2",
+             build_ctx_shared(16, ways, td_sharing=TDSharing.SHARED_UAR),
+             fwp),
+        ]
+        for label, m, feats in variants:
+            r = message_rate(m, features=feats, msgs_per_thread=2048)
+            row(f"fig7_ctx{ways}way_{label}", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s|uars={m.usage.uars}"
+                f"|uuars={m.usage.uuars}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 8: PD / MR sharing — no data-path cost (protection checks run
+on the NIC; the MR is a registration object), so throughput is flat and
+only the object counts change."""
+
+import dataclasses
+
+from repro.core import build_ctx_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+
+def main():
+    for ways in (1, 2, 4, 8, 16):
+        m = build_ctx_shared(16, 16)
+        # PD/MR are namespace objects: sharing changes accounting only
+        usage = dataclasses.replace(m.usage, pds=max(1, 16 // ways),
+                                    mrs=max(1, 16 // ways))
+        m = dataclasses.replace(m, usage=usage,
+                                label=f"pd_mr_{ways}way")
+        r = message_rate(m, features=ALL_FEATURES, msgs_per_thread=2048)
+        row(f"fig8_pdmr{ways}way", 1.0 / r.rate_mmps,
+            f"{r.rate_mmps:.1f}Mmsgs/s|pds={usage.pds}|mrs={usage.mrs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figs. 9-10: CQ sharing — lock/atomic contention on the completion
+path; worst without Unsignaled Completions (every WQE polls), and the
+Postlist-vs-Unsignaled tradeoff across q values."""
+
+import dataclasses
+
+from repro.core import build_cq_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES
+from benchmarks.common import row
+
+
+def main():
+    for ways in (1, 2, 4, 8, 16):
+        m = build_cq_shared(16, ways)
+        for label, feats in [
+                ("all", ALL_FEATURES),
+                ("all_wo_unsignaled", ALL_FEATURES.without("unsignaled"))]:
+            r = message_rate(m, features=feats, msgs_per_thread=2048)
+            row(f"fig9_cq{ways}way_{label}", 1.0 / r.rate_mmps,
+                f"{r.rate_mmps:.1f}Mmsgs/s|cqs={m.usage.cqs}")
+        # Fig 10: unsignaled sweep at postlist 32 and 1
+        for p in (32, 1):
+            for q in (1, 16, 64):
+                feats = dataclasses.replace(ALL_FEATURES, postlist=p,
+                                            unsignaled=q)
+                r = message_rate(m, features=feats, msgs_per_thread=2048)
+                row(f"fig10_cq{ways}way_p{p}_q{q}", 1.0 / r.rate_mmps,
+                    f"{r.rate_mmps:.1f}Mmsgs/s")
+
+
+if __name__ == "__main__":
+    main()

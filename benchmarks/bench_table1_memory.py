@@ -1,0 +1,18 @@
+"""Paper Table I: bytes used by mlx5 Verbs resources + endpoint memory."""
+
+from repro.core import resources as R
+from benchmarks.common import row
+
+
+def main():
+    for name, b in [("ctx", R.CTX_BYTES), ("pd", R.PD_BYTES),
+                    ("mr", R.MR_BYTES), ("qp", R.QP_BYTES),
+                    ("cq", R.CQ_BYTES),
+                    ("endpoint_total", R.ENDPOINT_BYTES)]:
+        row(f"table1_{name}_bytes", 0.0, str(b))
+    row("table1_ctx_share_pct", 0.0,
+        f"{R.CTX_BYTES / R.ENDPOINT_BYTES * 100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

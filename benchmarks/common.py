@@ -1,0 +1,24 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is the simulated/measured microseconds per operation
+(1 / message-rate for the ibsim benchmarks) and ``derived`` is the
+figure-specific quantity (rate in Mmsgs/s, % of baseline, resource counts,
+roofline seconds, ...).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    return out, (time.perf_counter() - t0) / repeat

@@ -1,0 +1,105 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: for each of the three chosen cells, lower the
+paper-faithful baseline and each named optimization variant, record the
+roofline terms, and append the hypothesis -> change -> before/after log to
+experiments/hillclimb.json.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+
+import json
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_record
+
+# (cell, variant-name, hypothesis, lower_cell kwargs)
+PLANS = [
+    ("smollm-360m", "train_4k", [
+        ("baseline_tp", "16-way TP replicates attention work for 15 heads",
+         {}),
+        ("dp_only",
+         "a 360M model should map the whole 16x16 mesh as 256-way DP: "
+         "predicted ~16x compute-term drop (no replicated attention), "
+         "collective term = one 1.4GB fp32 grad all-reduce",
+         {"rules_preset": "dp_only", "accum_override": 1}),
+        ("dp_only_bf16cast",
+         "cast params to bf16 once per step: grad/param collective bytes "
+         "halve on the reduce side",
+         {"rules_preset": "dp_only", "accum_override": 1,
+          "cast_params_once": True}),
+    ]),
+    ("deepseek-moe-16b", "train_4k", [
+        ("tp_zero1_moe_a2a",
+         "ITERATION 2 (tp_zero1 refuted the FSDP-gather theory: -45GiB "
+         "only; the gathers are the MoE dispatch buffers resharded "
+         "replicated->EP).  Scatter directly into the expert-aligned "
+         "flat layout: gathers should become all-to-alls (1/16 bytes)",
+         {"rules_preset": "tp_zero1"}),
+        ("tp_zero1_moe_a2a_bf16",
+         "ITERATION 3: bf16 live params + fp32 master in ZeRO-1 opt "
+         "state: remaining param-side collectives halve",
+         {"rules_preset": "tp_zero1", "params_bf16": True}),
+    ]),
+    ("qwen2-vl-72b", "train_4k", [
+        ("bf16_params_master",
+         "ITERATION 2 (cast-once refuted: XLA does not commute the "
+         "convert with the FSDP all-gather).  Store live params in bf16 "
+         "with the fp32 master ZeRO-1-sharded in the optimizer: gathers "
+         "and grad reduces move bf16 -> ~2x on both",
+         {"params_bf16": True}),
+        ("bf16_params_accum8",
+         "ITERATION 3: halve accumulation (sqrt-remat headroom): param "
+         "gathers scale with accum",
+         {"params_bf16": True, "accum_override": 8}),
+        ("bf16_params_accum4",
+         "ITERATION 4: accumulate 4 if activation residuals still fit",
+         {"params_bf16": True, "accum_override": 4}),
+    ]),
+]
+
+
+def run():
+    mesh = make_production_mesh()
+    out = []
+    for arch, shape, variants in PLANS:
+        for name, hypothesis, kw in variants:
+            try:
+                _, compiled, rec = lower_cell(arch, shape, mesh, **kw)
+                rec["mesh_name"] = "single"
+                rec["status"] = "ok"
+                row = analyze_record(rec)
+                entry = {
+                    "arch": arch, "shape": shape, "variant": name,
+                    "hypothesis": hypothesis, "kwargs": kw,
+                    "accum": rec["accum_steps"],
+                    "compute_s": row.compute_s,
+                    "memory_s": row.memory_s,
+                    "collective_s": row.collective_s,
+                    "collective_gib": rec["collectives"]["total_bytes"] / 2**30,
+                    "collective_by_kind": {
+                        k: v / 2**30 for k, v in
+                        rec["collectives"]["bytes"].items()},
+                    "bottleneck": row.bottleneck,
+                    "useful_ratio": row.useful_ratio,
+                    "roofline_fraction": row.roofline_fraction,
+                    "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+                    "args_gib": rec["memory"]["argument_bytes"] / 2**30,
+                    "fits_hbm": row.fits_hbm,
+                }
+                del compiled
+            except Exception as e:      # noqa: BLE001
+                entry = {"arch": arch, "shape": shape, "variant": name,
+                         "error": f"{type(e).__name__}: {e}"}
+            out.append(entry)
+            print(json.dumps(entry), flush=True)
+    os.makedirs("experiments", exist_ok=True)
+    path = "experiments/hillclimb.json"
+    prev = json.load(open(path)) if os.path.exists(path) else []
+    json.dump(prev + out, open(path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Roofline benchmark: three terms per (arch x shape) from the dry-run
+artifacts (single-pod mesh, per the assignment)."""
+
+import json
+import os
+
+from repro.launch.roofline import load_rows, markdown_table
+from benchmarks.common import row
+
+
+def main(dryrun_dir: str = "experiments/dryrun",
+         out_md: str = "experiments/roofline.md"):
+    if not os.path.isdir(dryrun_dir):
+        row("roofline_missing", 0.0,
+            f"run `python -m repro.launch.dryrun --all` first ({dryrun_dir})")
+        return
+    rows = load_rows(dryrun_dir, mesh="single")
+    for r in rows:
+        if r.status != "ok":
+            row(f"roofline_{r.arch}_{r.shape}", 0.0, "skipped")
+            continue
+        dom = max(r.compute_s, r.memory_s, r.collective_s)
+        row(f"roofline_{r.arch}_{r.shape}", dom * 1e6,
+            f"compute={r.compute_s:.3e}s|memory={r.memory_s:.3e}s"
+            f"|collective={r.collective_s:.3e}s|bottleneck={r.bottleneck}"
+            f"|useful={r.useful_ratio:.2f}|frac={r.roofline_fraction:.3f}")
+    os.makedirs(os.path.dirname(out_md) or ".", exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("# Roofline (single-pod 16x16, v5e constants)\n\n")
+        f.write(markdown_table(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

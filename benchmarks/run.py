@@ -1,0 +1,30 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (see benchmarks/common.py for the column convention).
+import importlib
+
+BENCHES = [
+    "bench_table1_memory",
+    "bench_fig2_extremes",
+    "bench_fig3_naive_scaling",
+    "bench_fig5_buf_sharing",
+    "bench_fig6_cache_align",
+    "bench_fig7_ctx_sharing",
+    "bench_fig8_pd_mr_sharing",
+    "bench_fig9_cq_sharing",
+    "bench_fig11_qp_sharing",
+    "bench_fig12_global_array",
+    "bench_fig14_stencil",
+    "bench_endpoint_collectives",
+    "roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name in BENCHES:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.comm.bucketing import BucketPlan, make_bucket_plan, pack_buckets, unpack_buckets
+from repro.comm.engine import GradSyncEngine
+from repro.comm.compression import Int8Compressor, NoCompressor
+
+__all__ = [
+    "BucketPlan", "make_bucket_plan", "pack_buckets", "unpack_buckets",
+    "GradSyncEngine", "Int8Compressor", "NoCompressor",
+]

@@ -1,0 +1,128 @@
+"""Gradient bucketing — the Postlist analogue (DESIGN.md §2).
+
+Partitions a gradient pytree into ``k`` byte-balanced buckets and packs each
+bucket into one flat array per dtype, so one collective moves a whole bucket
+(one "doorbell" for many "WQEs").  Bucket segments are padded to a 128-byte
+lane boundary — the paper's BUF-alignment lesson (Section V-A): producers
+must never share a lane tile.
+
+The bucket plan is computed from shapes only (works on ShapeDtypeStructs),
+so it can be built outside jit and closed over inside.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channels import ChannelPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class _Segment:
+    leaf: int                # leaf index in the flattened tree
+    shape: tuple
+    dtype: Any
+    offset: int              # element offset into the (bucket, dtype) buffer
+    padded_size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    treedef: Any
+    n_leaves: int
+    # (bucket, dtype_name) -> list of segments; insertion-ordered
+    buckets: tuple            # tuple of dicts dtype_name -> (total, segments)
+    leaf_bucket: tuple        # leaf index -> bucket index
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def bucket_bytes(self) -> list:
+        out = []
+        for b in self.buckets:
+            total = 0
+            for dtype_name, (n_elems, segs) in b.items():
+                total += n_elems * np.dtype(dtype_name).itemsize
+            out.append(total)
+        return out
+
+
+def _padded_elems(shape, dtype, pad_bytes: int) -> int:
+    itemsize = np.dtype(dtype).itemsize
+    n = int(np.prod(shape)) if shape else 1
+    lane = max(1, pad_bytes // itemsize)
+    return -(-n // lane) * lane
+
+
+def make_bucket_plan(tree, plan: ChannelPlan) -> BucketPlan:
+    """Greedy byte-balanced partition of ``tree``'s leaves into the plan's
+    bucket count.  Deterministic: sorted by (size desc, leaf index)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [(i, tuple(l.shape), jnp.result_type(l.dtype)) for i, l in
+              enumerate(leaves)]
+    n_buckets = plan.n_buckets(len(leaves))
+
+    sizes = [(int(np.prod(s) or 1) * np.dtype(d).itemsize, i)
+             for i, s, d in shapes]
+    order = sorted(range(len(leaves)),
+                   key=lambda i: (-sizes[i][0], i))
+    load = [0] * n_buckets
+    leaf_bucket = [0] * len(leaves)
+    for i in order:
+        b = min(range(n_buckets), key=lambda j: (load[j], j))
+        leaf_bucket[i] = b
+        load[b] += sizes[i][0]
+
+    buckets = []
+    for b in range(n_buckets):
+        per_dtype: dict = {}
+        for i, shape, dtype in shapes:
+            if leaf_bucket[i] != b:
+                continue
+            name = np.dtype(dtype).name
+            total, segs = per_dtype.get(name, (0, []))
+            padded = _padded_elems(shape, dtype, plan.bucket_pad_bytes)
+            segs = segs + [_Segment(leaf=i, shape=shape, dtype=dtype,
+                                    offset=total, padded_size=padded)]
+            per_dtype[name] = (total + padded, segs)
+        buckets.append(per_dtype)
+    return BucketPlan(treedef=treedef, n_leaves=len(leaves),
+                      buckets=tuple(buckets), leaf_bucket=tuple(leaf_bucket))
+
+
+def pack_buckets(tree, plan: BucketPlan) -> list:
+    """-> list over buckets of {dtype_name: flat array}."""
+    leaves = jax.tree.flatten(tree)[0]
+    out = []
+    for per_dtype in plan.buckets:
+        packed = {}
+        for name, (total, segs) in per_dtype.items():
+            parts = []
+            for s in segs:
+                flat = jnp.ravel(leaves[s.leaf])
+                if s.padded_size != flat.size:
+                    flat = jnp.pad(flat, (0, s.padded_size - flat.size))
+                parts.append(flat)
+            packed[name] = (jnp.concatenate(parts) if len(parts) > 1
+                            else parts[0])
+        out.append(packed)
+    return out
+
+
+def unpack_buckets(packed: Sequence, plan: BucketPlan):
+    """Inverse of :func:`pack_buckets`."""
+    leaves = [None] * plan.n_leaves
+    for per_dtype, packed_b in zip(plan.buckets, packed):
+        for name, (total, segs) in per_dtype.items():
+            flat = packed_b[name]
+            for s in segs:
+                n = int(np.prod(s.shape) or 1)
+                piece = jax.lax.dynamic_slice_in_dim(flat, s.offset, n)
+                leaves[s.leaf] = piece.reshape(s.shape)
+    return jax.tree.unflatten(plan.treedef, leaves)

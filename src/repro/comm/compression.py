@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (beyond-paper optimization).
+
+Int8 quantization with a per-bucket scale and local error-feedback residuals
+(Seide et al. 1-bit SGD lineage; Karimireddy et al. EF-SGD).  Summation
+happens in int32 (no overflow for <= 2^23 participants), dequantized by the
+shared scale.  The residual keeps the compounding quantization error local,
+preserving convergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class NoCompressor:
+    """Identity compressor (default)."""
+
+    def init_state(self, packed_shapes):
+        return ()
+
+    def reduce(self, flat, state, psum_fn):
+        return psum_fn(flat), state
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Quantize a flat bucket to int8 with error feedback.
+
+    reduce(x) = dequant(psum(quant(x + residual))); the new residual is the
+    local quantization error.  The scale is the local absmax — psum-maxed so
+    every participant uses the same scale (required for exact summation).
+    """
+
+    bits: int = 8
+
+    def init_state(self, flat_shape_dtypes):
+        return [jnp.zeros(s, jnp.float32) for s, _ in flat_shape_dtypes]
+
+    def reduce(self, flat, residual, psum_fn, pmax_fn):
+        x = flat.astype(jnp.float32) + residual
+        qmax = 2.0 ** (self.bits - 1) - 1
+        scale = pmax_fn(jnp.max(jnp.abs(x))) / qmax
+        scale = jnp.maximum(scale, 1e-30)
+        q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+        new_residual = x - q.astype(jnp.float32) * scale
+        summed = psum_fn(q.astype(jnp.int32))
+        out = (summed.astype(jnp.float32) * scale).astype(flat.dtype)
+        return out, new_residual

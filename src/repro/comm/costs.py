@@ -1,0 +1,81 @@
+"""Alpha-beta cost model for ICI collectives (TPU v5e constants).
+
+Used by the roofline analysis (collective term) and by the endpoint-category
+comparison: the paper's perf-vs-resources tradeoff shows up here as
+  per-tensor collectives  -> alpha-dominated (many doorbells),
+  one fused collective    -> no overlap, full beta serialized,
+  k bucketed channels     -> alphas amortized, betas overlappable.
+
+Ring collectives over a mesh axis of size n moving B bytes per chip:
+  all-reduce:       2(n-1) hops of B/n   -> beta = 2B(n-1)/(n*bw), 2(n-1) alphas
+  reduce-scatter /
+  all-gather:        (n-1) hops of B/n   -> half of the above
+  all-to-all:        B(n-1)/n bytes       -> (n-1) alphas
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.channels import ChannelPlan
+
+# Hardware constants (per the assignment's v5e-class numbers).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+ICI_ALPHA = 1e-6                  # seconds per collective step (latency)
+# Channels that can genuinely be in flight at once on the fabric before
+# serializing (the uUAR-slot analogue).
+MAX_INFLIGHT_CHANNELS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    seconds: float
+    alpha_seconds: float
+    beta_seconds: float
+    n_collectives: int
+
+
+def ring_allreduce_seconds(bytes_per_chip: float, axis_size: int,
+                           link_bw: float = ICI_LINK_BW,
+                           alpha: float = ICI_ALPHA) -> tuple:
+    if axis_size <= 1 or bytes_per_chip == 0:
+        return 0.0, 0.0
+    steps = 2 * (axis_size - 1)
+    beta = bytes_per_chip * 2 * (axis_size - 1) / (axis_size * link_bw)
+    return steps * alpha, beta
+
+
+def estimate_sync_time(bucket_bytes: Sequence[float], plan: ChannelPlan,
+                       axis_size: int, *, link_bw: float = ICI_LINK_BW,
+                       alpha: float = ICI_ALPHA,
+                       max_inflight: int = MAX_INFLIGHT_CHANNELS
+                       ) -> CollectiveCost:
+    """Estimated wall time of a gradient sync under the channel plan.
+
+    Serialized plans chain all betas AND alphas on one dependency; channelled
+    plans overlap up to ``max_inflight`` collectives (alphas pipeline,
+    betas share the links); double-buffered plans additionally hide the
+    packing latency of the next bucket (modeled as one alpha per bucket).
+    """
+    alphas, betas = [], []
+    for b in bucket_bytes:
+        a, be = ring_allreduce_seconds(b, axis_size, link_bw, alpha)
+        alphas.append(a)
+        betas.append(be)
+    n = len(bucket_bytes)
+    if plan.serialize or n == 1:
+        total = sum(alphas) + sum(betas)
+        return CollectiveCost(total, sum(alphas), sum(betas), n)
+    # betas share the physical links: they sum; alphas overlap across the
+    # in-flight window
+    inflight = min(max_inflight, n)
+    alpha_eff = sum(alphas) / inflight
+    if plan.double_buffered:
+        # packing of bucket i+1 hidden behind collective i: drop one alpha
+        # step per bucket beyond the first
+        alpha_eff = max(alphas) if n > 1 else alpha_eff
+    total = alpha_eff + sum(betas)
+    return CollectiveCost(total, alpha_eff, sum(betas), n)

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: scalable communication endpoints.
+
+Exact mlx5 resource accounting (resources.py), the uUAR-to-QP assignment
+policy (policy.py), the six scalable-endpoint categories (endpoints.py), the
+IB data-path simulator reproducing the paper's figures (ibsim/), and the
+channel abstraction that carries the endpoint model into JAX collective
+scheduling (channels.py).
+"""
+
+from repro.core.endpoints import (Category, EndpointModel, ThreadPath,
+                                  build_cq_shared, build_ctx_shared,
+                                  build_qp_shared, paper_categories)
+from repro.core.resources import (ResourceUsage, TDSharing,
+                                  naive_td_per_ctx_usage)
+
+__all__ = [
+    "Category", "EndpointModel", "ThreadPath", "ResourceUsage", "TDSharing",
+    "build_cq_shared", "build_ctx_shared", "build_qp_shared",
+    "naive_td_per_ctx_usage", "paper_categories",
+]

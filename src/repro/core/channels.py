@@ -1,0 +1,92 @@
+"""Channels: the TPU-domain realization of scalable endpoints.
+
+The paper's endpoint categories map logical communication producers (there:
+threads driving QPs; here: gradient buckets / layer collectives) onto a
+number of independently schedulable communication channels.  On TPU a
+"channel" is an independently issued collective op — XLA gives each its own
+channel id and can overlap it with compute and with other collectives —
+while a fully shared endpoint is one fused collective that serializes
+everything behind a single dependency.
+
+Resource analogue (documented in DESIGN.md §2): each live channel needs a
+staging buffer (its bucket) and an in-flight collective slot; per-producer
+channels (MPI everywhere) burn maximal buffers/slots, one fused channel
+(MPI+threads) burns minimal resources but serializes, and k bucketed
+channels — optionally double-buffered, the 2xDynamic trick — recover
+dedicated-path performance with a fraction of the resources.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.endpoints import Category
+
+# Default number of channel "lanes", mirroring the paper's 16-thread socket.
+DEFAULT_LANES = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """How logical producers map onto collective channels.
+
+    Attributes:
+      category: the scalable-endpoint category this plan realizes.
+      n_channels: independent collective streams (QP/uUAR analogue).
+      per_producer: one channel per producer (ignore n_channels).
+      double_buffered: 2xDynamic — two buffers per channel so bucket i+1
+        packing overlaps bucket i's collective.
+      serialize: shared-QP analogue — producers funnel into ONE fused
+        collective (single dependency chain, no overlap).
+      sync_stride: unsignaled-completion analogue — a dependency barrier is
+        materialized only every ``sync_stride`` buckets.
+      bucket_pad_bytes: BUF-alignment lesson (Section V-A): bucket segments
+        are padded to this boundary so producers never share a lane tile.
+    """
+
+    category: Category
+    n_channels: int
+    per_producer: bool = False
+    double_buffered: bool = False
+    serialize: bool = False
+    sync_stride: int = 1
+    bucket_pad_bytes: int = 128
+
+    def n_buckets(self, n_producers: int) -> int:
+        if self.per_producer:
+            return n_producers
+        if self.serialize:
+            return 1
+        return max(1, min(self.n_channels, n_producers))
+
+    def staging_buffers(self, n_producers: int) -> int:
+        """Channel staging buffers held live (the uUAR-usage analogue)."""
+        k = self.n_buckets(n_producers)
+        return 2 * k if self.double_buffered else k
+
+
+def plan_for(category: Category, *, lanes: int = DEFAULT_LANES,
+             sync_stride: int = 1) -> ChannelPlan:
+    """The six endpoint categories as channel plans (Section VI adapted)."""
+    if category == Category.MPI_EVERYWHERE:
+        # dedicated path per producer: max independence, max resource usage
+        return ChannelPlan(category, n_channels=0, per_producer=True,
+                           sync_stride=sync_stride)
+    if category == Category.TWO_X_DYNAMIC:
+        # k lanes, double-buffered: packing of bucket i+1 overlaps the
+        # collective of bucket i — the paper's best performer
+        return ChannelPlan(category, n_channels=lanes, double_buffered=True,
+                           sync_stride=sync_stride)
+    if category == Category.DYNAMIC:
+        return ChannelPlan(category, n_channels=lanes,
+                           sync_stride=sync_stride)
+    if category == Category.SHARED_DYNAMIC:
+        return ChannelPlan(category, n_channels=max(1, lanes // 2),
+                           sync_stride=sync_stride)
+    if category == Category.STATIC:
+        return ChannelPlan(category, n_channels=max(1, lanes // 4),
+                           sync_stride=sync_stride)
+    if category == Category.MPI_THREADS:
+        return ChannelPlan(category, n_channels=1, serialize=True,
+                           sync_stride=sync_stride)
+    raise ValueError(category)

@@ -1,0 +1,8 @@
+from repro.core.ibsim.costmodel import CostModel, Features, BufferConfig
+from repro.core.ibsim.engine import Simulator, SimResult
+from repro.core.ibsim.benchmark import message_rate, MessageRateResult
+
+__all__ = [
+    "CostModel", "Features", "BufferConfig", "Simulator", "SimResult",
+    "message_rate", "MessageRateResult",
+]

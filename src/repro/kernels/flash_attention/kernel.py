@@ -1,0 +1,125 @@
+"""Fused streaming-softmax GQA attention (FlashAttention on TPU).
+
+TPU-native layout (DESIGN.md §5): one program instance owns a
+(q_block x head_dim) output tile in VMEM and streams kv blocks HBM->VMEM
+along the innermost ("arbitrary") grid dim, keeping the running max /
+normalizer / accumulator in VMEM scratch across that dim.  The MXU sees
+(q_block x head_dim) @ (head_dim x kv_block) matmuls; q_block / kv_block
+default to 512/1024 with head_dim expected 128-aligned on real hardware.
+
+Grid: (B * Hq, nq, nk); GQA maps query head h to kv head h // group via the
+k/v index_maps — no materialized head broadcast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, window: int, softcap: float, scale: float,
+                  q_block: int, kv_block: int, nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = kj * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    # skip fully-masked kv blocks: causal -> blocks strictly in the future;
+    # window -> blocks entirely left of the window for every q row
+    needed = jnp.asarray(True)
+    if causal:
+        needed &= kj * kv_block <= qi * q_block + q_block - 1
+        if window > 0:
+            needed &= (kj + 1) * kv_block - 1 > qi * q_block - window
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (qb, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (kb, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = jnp.ones((q_block, kv_block), jnp.bool_)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window > 0:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         softcap: float = 0.0, q_block: int = 512,
+                         kv_block: int = 1024, interpret: bool = False):
+    """q: (BHq, Sq, dh); k/v: (BHkv, Sk, dh) with BHq % BHkv == 0
+    (GQA group = BHq // BHkv, heads-major layout) -> (BHq, Sq, dh)."""
+    bhq, sq, dh = q.shape
+    bhkv, sk = k.shape[0], k.shape[1]
+    assert bhq % bhkv == 0
+    group = bhq // bhkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+    scale = dh ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, softcap=softcap,
+        scale=scale, q_block=q_block, kv_block=kv_block, nk=nk)
+
+    grid = (bhq, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, dh), lambda h, qi, kj: (h, qi, 0)),
+            pl.BlockSpec((1, kv_block, dh),
+                         lambda h, qi, kj, g=group: (h // g, kj, 0)),
+            pl.BlockSpec((1, kv_block, dh),
+                         lambda h, qi, kj, g=group: (h // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, dh),
+                               lambda h, qi, kj: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, dh), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper: (B, S, H, dh) layout, auto interpret on CPU."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "q_block",
+                                   "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_block: int = 512,
+                    kv_block: int = 1024, interpret: bool = None):
+    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh) -> (B, Sq, Hq, dh).
+
+    Lowers the Pallas TPU kernel on TPU; everywhere else runs the kernel
+    body under the Pallas interpreter (bit-exact semantics, CPU-testable).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    # (B, S, H, dh) -> heads-major (B*H, S, dh)
+    qh = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], dh)
+    out = flash_attention_bhsd(qh, kh, vh, causal=causal, window=window,
+                               softcap=softcap, q_block=q_block,
+                               kv_block=kv_block, interpret=interpret)
+    return out.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)

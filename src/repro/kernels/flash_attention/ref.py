@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (BHq, Sq, dh); k/v: (BHkv, Sk, dh) heads-major GQA layout."""
+    bhq, sq, dh = q.shape
+    bhkv, sk = k.shape[0], k.shape[1]
+    g = bhq // bhkv
+    kx = jnp.repeat(k, g, axis=0)
+    vx = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * dh ** -0.5
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    valid = jnp.ones((sq, sk), jnp.bool_)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window > 0:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vx.astype(jnp.float32)).astype(
+        q.dtype)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (associative scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, x):
+    """h_t = a_t * h_{t-1} + x_t over axis 1 (h_0 = 0)."""
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, xf), axis=1)
+    return h.astype(x.dtype)

@@ -1,0 +1,280 @@
+"""Loop-aware cost analysis over compiled (SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+a 10-step scan of matmuls reports 1 matmul of FLOPs), which silently
+under-counts every scanned layer stack, gradient-accumulation loop, and
+chunked-attention scan — and the same for collectives inside loops.  This
+walker parses the HLO module, follows ``calls=`` / ``to_apply=`` /
+``body=`` edges, and multiplies by the ``known_trip_count`` that XLA
+records in each while op's backend_config, giving trip-aware:
+
+  * matmul FLOPs (dot ops; the MXU-relevant quantity for the roofline
+    compute term),
+  * HBM byte traffic (operand + result bytes at fusion boundaries — XLA's
+    own fusion model means internal intermediates never hit HBM),
+  * collective counts and bytes (result shapes; per-device shard sizes
+    since the module is SPMD-partitioned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"^((?:\([^=]*?\)|[a-z0-9\[\],{}]+))\s+([\w\-]+)\(")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_list(type_str: str):
+    """-> list of (dtype, [dims])."""
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE.findall(type_str)]
+
+
+def _collective_base(op: str) -> Optional[str]:
+    for suf in ("-start", "-done"):
+        if op.endswith(suf):
+            op = op[: -len(suf)]
+    return op if op in COLLECTIVES else None
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES.get(d, 4) * (int(__import__("math").prod(dims))
+                                         if dims else 1)
+               for d, dims in _shape_list(type_str))
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str
+
+
+@dataclasses.dataclass
+class HLOCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HLOCosts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0)
+                                         + v * mult)
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = (self.collective_bytes.get(k, 0)
+                                        + v * mult)
+
+    @property
+    def collective_total_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def collective_total_count(self) -> float:
+        return sum(self.collective_counts.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collectives": {"counts": self.collective_counts,
+                            "bytes": self.collective_bytes,
+                            "total_bytes": self.collective_total_bytes,
+                            "total_count": self.collective_total_count}}
+
+
+class HLOAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, list] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, HLOCosts] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if "/*" in line:
+                line = re.sub(r"/\*.*?\*/", "", line)
+            mi = _INSTR.match(line)
+            if not mi:
+                continue
+            name, rhs = mi.groups()
+            mo = _OPCODE.match(rhs)
+            if not mo:
+                continue
+            type_str, opcode = mo.groups()
+            self.comps[cur].append(
+                _Instr(name=name, opcode=opcode, type_str=type_str,
+                       rest=rhs[mo.end():]))
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, instr: _Instr, symbols: Dict[str, str]) -> float:
+        result = _shape_list(instr.type_str)
+        out_elems = 1
+        for _, dims in result:
+            for d in dims:
+                out_elems *= d
+        ops = _OPERANDS.findall(instr.rest)
+        contract = _CONTRACT.search(instr.rest)
+        k = 1
+        if ops and contract is not None:
+            lhs_type = symbols.get(ops[0], "")
+            lhs_shapes = _shape_list(lhs_type)
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for ci in (int(x) for x in
+                           contract.group(1).split(",") if x):
+                    if ci < len(dims):
+                        k *= dims[ci]
+        return 2.0 * out_elems * k
+
+    def comp_cost(self, comp: str) -> HLOCosts:
+        if comp in self._memo:
+            return self._memo[comp]
+        cost = HLOCosts()
+        self._memo[comp] = cost          # guards recursion
+        symbols = {i.name: i.type_str for i in self.comps.get(comp, [])}
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            if op == "dot":
+                cost.flops += self._dot_flops(instr, symbols)
+                in_bytes = sum(_bytes_of(symbols.get(o, ""))
+                               for o in _OPERANDS.findall(instr.rest)[:2])
+                cost.bytes_accessed += in_bytes + _bytes_of(instr.type_str)
+            elif op == "convolution":
+                # rough: 2 * out_elems * (in_ch * window) — our models
+                # lower convs as shifts+mults, so this rarely fires
+                cost.flops += 2.0 * _bytes_of(instr.type_str)
+            elif _collective_base(op) is not None:
+                if op.endswith("-done"):
+                    continue
+                base = _collective_base(op)
+                nb = _bytes_of(instr.type_str)
+                cost.collective_counts[base] = \
+                    cost.collective_counts.get(base, 0) + 1
+                cost.collective_bytes[base] = \
+                    cost.collective_bytes.get(base, 0) + nb
+                cost.bytes_accessed += nb
+            elif op == "fusion":
+                m = _CALL_ATTR.search(instr.rest)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+                # NOTE: fusion-boundary bytes are NOT counted — XLA CPU
+                # wraps nearly every op in its own kLoop fusion, so boundary
+                # accounting would bill every elementwise intermediate as
+                # HBM traffic (~100x overcount measured).  The bytes model
+                # is "ideally fused": dot operands/results, data-movement
+                # ops, and collectives only.
+            elif op == "while":
+                body = _CALL_ATTR.search(instr.rest)
+                condc = _COND_ATTR.search(instr.rest)
+                trip = 1
+                mt = _TRIP.search(instr.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                sub = HLOCosts()
+                if body:
+                    sub.add(self.comp_cost(body.group(1)))
+                if condc:
+                    sub.add(self.comp_cost(condc.group(1)))
+                cost.add(sub, mult=trip)
+            elif op in ("call", "async-start"):
+                m = _CALL_ATTR.search(instr.rest)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+            elif op == "conditional":
+                mb = _BRANCHES.search(instr.rest)
+                if mb:
+                    subs = [self.comp_cost(b.strip().lstrip("%"))
+                            for b in mb.group(1).split(",") if b.strip()]
+                    if subs:
+                        # worst-case branch
+                        best = max(subs, key=lambda c: c.flops)
+                        cost.add(best)
+            elif op in ("custom-call", "reduce", "reduce-window", "sort",
+                        "scatter", "gather", "dynamic-slice",
+                        "dynamic-update-slice", "copy", "transpose",
+                        "broadcast", "concatenate", "slice", "reshape",
+                        "bitcast", "convert", "select", "pad", "iota",
+                        "rng", "compare", "add", "multiply", "subtract",
+                        "divide", "exponential", "tanh", "maximum",
+                        "minimum", "log", "rsqrt", "sqrt", "negate",
+                        "abs", "and", "or", "xor", "clamp"):
+                if op in ("copy", "transpose", "scatter", "gather",
+                          "dynamic-slice", "dynamic-update-slice", "sort",
+                          "concatenate", "pad", "reduce", "reduce-window"):
+                    cost.bytes_accessed += 2 * _bytes_of(instr.type_str)
+        return cost
+
+    def module_cost(self) -> HLOCosts:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> HLOCosts:
+    return HLOAnalyzer(hlo_text).module_cost()
+
+
+# Backwards-compatible helper used by tests/benchmarks ----------------------
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self):
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self):
+        return sum(self.counts.values())
+
+    def as_dict(self):
+        return {"counts": dict(self.counts), "bytes": dict(self.bytes_by_kind),
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    c = analyze(hlo_text)
+    return CollectiveStats(
+        {k: int(v) for k, v in c.collective_counts.items()},
+        {k: int(v) for k, v in c.collective_bytes.items()})

@@ -1,0 +1,220 @@
+"""GQA attention: reference, chunked (flash-style streaming softmax),
+sliding-window, cross-attention, and cached decode paths.
+
+The chunked path is the mathematical oracle for the Pallas flash kernel
+(kernels/flash_attention) and the shape the dry-run lowers: same FLOPs and
+O(block) memory, so 32k prefill never materializes an S x S score tensor.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, apply_rope, norm_specs
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False):
+    """Projection weights keep the head count as an explicit dim so the
+    sharding rules shard whole heads (Megatron-style); archs whose head
+    count does not divide the model axis fall back to replicated attention
+    weights instead of splitting across head boundaries (which forces the
+    partitioner into per-scan-step reshards)."""
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    specs = {
+        "wq": ParamSpec((d, hq, dh), ("embed", "q_heads", "head_dim"),
+                        fan_in=d),
+        "wk": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+                        fan_in=d),
+        "wv": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+                        fan_in=d),
+        "wo": ParamSpec((hq, dh, d), ("q_heads", "head_dim", "embed"),
+                        fan_in=hq * dh),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ParamSpec((hq, dh), ("q_heads", "head_dim"),
+                                init="zeros")
+        specs["bk"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"),
+                                init="zeros")
+        specs["bv"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"),
+                                init="zeros")
+    return specs
+
+
+def project_q(p, x, cfg: ArchConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    return q
+
+
+def project_kv(p, x, cfg: ArchConfig):
+    dt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+def _softcap(s, cap: float):
+    return jnp.tanh(s / cap) * cap if cap > 0 else s
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) additive bias from position masks."""
+    valid = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], jnp.bool_)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        q_offset: int = 0):
+    """Full-score attention.  q: (B,Sq,Hq,dh); k/v: (B,Sk,Hkv,dh)."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    s = _softcap(s, softcap)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, q_block: int = 512,
+                      kv_block: int = 1024, q_offset: int = 0,
+                      skip_future_blocks: bool = False):
+    """Streaming-softmax attention over (q_block, kv_block) tiles.
+
+    Never materializes more than (B, Hq, q_block, kv_block) scores.  With
+    ``skip_future_blocks`` the inner scan runs only over the causally
+    reachable kv prefix per q block (triangular schedule) — the beyond-
+    baseline FLOP saving recorded in EXPERIMENTS.md §Perf.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, q_block, sk,
+                                                      kv_block)
+    nq, nk = sq // q_block, sk // kv_block
+    scale = dh ** -0.5
+
+    qh = q.reshape(b, nq, q_block, hkv, g, dh)
+    kh = k.reshape(b, nk, kv_block, hkv, dh)
+    vh = v.reshape(b, nk, kv_block, hkv, dh)
+
+    def q_step(qi):
+        q_i = qh[:, qi].astype(jnp.float32) * scale   # (b,qb,h,g,d)
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            k_j = kh[:, kj].astype(jnp.float32)
+            v_j = vh[:, kj].astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j)
+            s = _softcap(s, softcap)
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            valid = jnp.ones((q_block, kv_block), jnp.bool_)
+            if causal:
+                valid &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                valid &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bhgqk,bkhd->bhgqd", p, v_j))
+            return (acc_new, m_new, l_new), None
+
+        init = (jnp.zeros((b, hkv, g, q_block, dh), jnp.float32),
+                jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, q_block), jnp.float32))
+        kv_step = jax.checkpoint(kv_step, prevent_cse=False)
+        if skip_future_blocks and causal and q_offset == 0:
+            # triangular schedule: kv blocks beyond the q block's diagonal
+            # are skipped entirely (dynamic trip count via while_loop)
+            n_valid = (qi * q_block + q_block + kv_block - 1) // kv_block
+            n_valid = jnp.minimum(n_valid, nk)
+
+            def cond(state):
+                kj, _ = state
+                return kj < n_valid
+
+            def body(state):
+                kj, carry = state
+                carry, _ = kv_step(carry, kj)
+                return kj + 1, carry
+
+            _, (acc, m, l) = jax.lax.while_loop(cond, body, (0, init))
+        else:
+            (acc, m, l), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,h,g,qb,d)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, hq, dh)
+
+    out = jax.lax.map(q_step, jnp.arange(nq))               # (nq,b,qb,hq,dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cur_index, *, window: int = 0,
+                     softcap: float = 0.0, valid_mask=None):
+    """Single-token decode vs a cache.  q: (B,1,Hq,dh);
+    k_cache/v_cache: (B,Smax,Hkv,dh); cur_index: scalar int32 — the position
+    being written (attends to [0, cur_index]).  ``valid_mask`` (Smax,)
+    overrides the index-derived mask (rolling-window caches)."""
+    b, _, hq, dh = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k_cache.astype(jnp.float32))
+    s = _softcap(s * dh ** -0.5, softcap)
+    if valid_mask is None:
+        k_pos = jnp.arange(smax)
+        valid = k_pos <= cur_index
+        if window > 0:
+            valid &= k_pos > cur_index - window
+    else:
+        valid = valid_mask
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def select_attention(cfg: ArchConfig, seq_len: int,
+                     skip_future: bool = False):
+    """Pick the attention impl: chunked for long sequences, reference for
+    short ones (smoke tests).  ``skip_future`` enables the triangular
+    schedule (while_loop over the causally reachable kv prefix): 2.8x on
+    the prefill compute term (EXPERIMENTS §Perf), forward-only (not
+    reverse-differentiable), so it is offered for prefill/serving."""
+    if seq_len >= 1024:
+        return partial(attention_chunked,
+                       q_block=min(512, seq_len),
+                       kv_block=min(1024, seq_len),
+                       skip_future_blocks=skip_future)
+    return attention_reference

@@ -1,0 +1,56 @@
+"""Chunked softmax cross-entropy: the full (B, S, vocab) logits tensor is
+never materialized — the head matmul + logsumexp run per sequence chunk
+under remat (vocab 152k x 1M tokens would otherwise be ~300 GB)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_loss(h_chunk, labels_chunk, mask_chunk, head):
+    """h: (B, C, d); labels: (B, C); head: (d, V)."""
+    logits = (h_chunk @ head.astype(h_chunk.dtype)).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None],
+                               axis=-1)[..., 0]
+    nll = (lse - gold) * mask_chunk
+    return jnp.sum(nll), jnp.sum(mask_chunk)
+
+
+def chunked_softmax_xent(hidden, head, labels, *, mask=None,
+                         chunk: int = 512):
+    """-> (mean_nll, n_tokens).  hidden: (B, S, d); head: (d, V);
+    labels: (B, S) int32; mask: (B, S) float or None (all valid)."""
+    b, s, d = hidden.shape
+    if mask is None:
+        # derive from labels so the mask carries the same varying manual
+        # axes as the data under shard_map
+        mask = jnp.full_like(labels, 1.0, dtype=jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s += pad
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body_fn(carry, xs):
+        tot, cnt = carry
+        l, n = _chunk_loss(xs[0], xs[1], xs[2], head)
+        return (tot + l, cnt + n), None
+
+    # derive the carry init from the inputs so its varying-manual-axes
+    # match under shard_map (a plain zeros() is unvarying and trips the
+    # scan vma check)
+    zero = (jnp.sum(hc[0, :1, :1, :1]).astype(jnp.float32) * 0.0)
+    (total, count), _ = jax.lax.scan(
+        jax.checkpoint(body_fn, prevent_cse=False),
+        (zero, zero), (hc, lc, mc))
+    return total / jnp.maximum(count, 1.0), count

@@ -1,0 +1,202 @@
+"""Model: config -> params / loss_fn / prefill / decode_step.
+
+One class serves all ten assigned architectures: the block pattern,
+MoE/recurrent/enc-dec structure, and modality stubs all come from
+``ArchConfig``.  Everything is pure functions over explicit param pytrees.
+
+Batch conventions
+-----------------
+tokens mode   : {"tokens": (B,S) i32, "labels": (B,S) i32}
+embeddings    : {"embeds": (B,S,d) bf16, "labels": (B,S) i32,
+(vlm stub)       "positions": (B,S,3) i32 (M-RoPE)}
+enc-dec       : {"enc_embeds": (B,Se,d) bf16, "tokens": (B,Sd) i32,
+(audio stub)     "labels": (B,Sd) i32}
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import params as P
+from repro.models.attention import select_attention
+from repro.models.layers import (apply_norm, embed_specs, embed_tokens,
+                                 head_matrix, norm_specs)
+from repro.models.losses import chunked_softmax_xent
+from repro.models.transformer import (BlockCtx, LayerPlan, apply_stack,
+                                      init_stack_cache, make_plan,
+                                      stack_specs_tree)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.plan = make_plan(cfg, cross=cfg.is_encdec)
+        self.enc_plan = (make_plan(cfg, n_layers=cfg.n_enc_layers)
+                         if cfg.is_encdec else None)
+
+    # ----- parameters ----------------------------------------------------
+    def param_specs(self):
+        cfg = self.cfg
+        specs = {"decoder": stack_specs_tree(cfg, self.plan),
+                 "final_norm": norm_specs(cfg)}
+        if cfg.input_mode == "tokens" or cfg.is_encdec:
+            specs["embed"] = embed_specs(cfg)
+        else:
+            # modality stub: inputs are precomputed embeddings; only an
+            # (untied) LM head is needed
+            specs["embed"] = {
+                "head": embed_specs(cfg)["head"]} if not cfg.tie_embeddings \
+                else embed_specs(cfg)
+        if cfg.is_encdec:
+            specs["encoder"] = stack_specs_tree(cfg, self.enc_plan)
+            specs["enc_final_norm"] = norm_specs(cfg)
+        return specs
+
+    def init(self, key):
+        return P.materialize(self.param_specs(), key)
+
+    def abstract_params(self):
+        return P.abstract(self.param_specs())
+
+    def param_axes(self):
+        return P.axes_tree(self.param_specs())
+
+    def n_params(self) -> int:
+        return P.n_params(self.param_specs())
+
+    # ----- forward -------------------------------------------------------
+    def _positions(self, b, s, offset=0):
+        pos = offset + jnp.arange(s)[None, :].astype(jnp.int32)
+        pos = jnp.broadcast_to(pos, (b, s))
+        if self.cfg.pos == "mrope":
+            return jnp.broadcast_to(pos[..., None], (b, s, 3))
+        return pos
+
+    def _inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.is_encdec or cfg.input_mode == "tokens":
+            x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        else:
+            x = batch["embeds"].astype(cfg.compute_dtype)
+        b, s = x.shape[:2]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = self._positions(b, s)
+        return x, pos
+
+    def _encode(self, params, batch, attn_len=None):
+        cfg = self.cfg
+        enc_x = batch["enc_embeds"].astype(cfg.compute_dtype)
+        b, se = enc_x.shape[:2]
+        ctx = BlockCtx(cfg=cfg, mode="train",
+                       positions=self._positions(b, se),
+                       attn_fn=select_attention(cfg, se), causal=False)
+        h, _, _ = apply_stack(params["encoder"], enc_x, cfg, self.enc_plan,
+                              ctx)
+        return apply_norm(params["enc_final_norm"], h, cfg.norm)
+
+    def forward(self, params, batch, *, mode="train", cache=None,
+                shard_fn=lambda a, *n: a, remat=True,
+                skip_future=False):
+        """-> (hidden (B,S,d), new_cache, aux_loss)."""
+        cfg = self.cfg
+        x, pos = self._inputs(params, batch)
+        b, s = x.shape[:2]
+        enc_out = None
+        if cfg.is_encdec and mode != "decode":
+            enc_out = self._encode(params, batch)
+        ctx = BlockCtx(cfg=cfg, mode=mode, positions=pos,
+                       attn_fn=select_attention(
+                           cfg, s,
+                           skip_future=skip_future and mode == "prefill"),
+                       causal=True,
+                       enc_out=enc_out, shard_fn=shard_fn,
+                       decode_idx=(cache or {}).get("idx"),
+                       window_cache=(cfg.attn_window > 0
+                                     and cfg.sub_quadratic))
+        stack_cache = None if cache is None else cache["stack"]
+        h, new_stack, aux = apply_stack(params["decoder"], x, cfg, self.plan,
+                                        ctx, cache=stack_cache, remat=remat)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        new_cache = None
+        if cache is not None:
+            idx = cache["idx"] + (1 if mode == "decode" else s)
+            new_cache = {"stack": new_stack, "idx": idx}
+        return h, new_cache, aux
+
+    # ----- training ------------------------------------------------------
+    def loss_fn(self, params, batch, shard_fn=lambda a, *n: a,
+                remat: bool = True, cast_params_once: bool = False):
+        cfg = self.cfg
+        if cast_params_once:
+            # cast fp32 master weights to the compute dtype on their OWN
+            # shards, so FSDP all-gathers move bf16 instead of fp32
+            # (§Perf iteration; halves parameter-gather collective bytes)
+            dt = jnp.dtype(cfg.compute_dtype)
+            params = jax.tree.map(
+                lambda p: p.astype(dt)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        h, _, aux = self.forward(params, batch, mode="train",
+                                 shard_fn=shard_fn, remat=remat)
+        head = head_matrix(params["embed"], cfg)
+        mask = batch.get("loss_mask")
+        nll, n_tok = chunked_softmax_xent(h, head, batch["labels"],
+                                          mask=mask)
+        loss = nll
+        metrics = {"nll": nll, "n_tokens": n_tok}
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_coef * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ----- serving -------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   enc_len: int = 0):
+        cfg = self.cfg
+        stack = init_stack_cache(
+            cfg, self.plan, batch_size, max_len, enc_len=enc_len,
+            window_cache=(cfg.attn_window > 0 and cfg.sub_quadratic))
+        return {"stack": stack, "idx": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, batch, cache, shard_fn=lambda a, *n: a,
+                skip_future: bool = True):
+        """Run the prompt, fill the cache; -> (last_logits, cache).
+        ``skip_future`` uses the triangular attention schedule (forward-
+        only; 2.8x compute on 32k prompts, EXPERIMENTS §Perf)."""
+        cfg = self.cfg
+        h, new_cache, _ = self.forward(params, batch, mode="prefill",
+                                       cache=cache, shard_fn=shard_fn,
+                                       remat=False, skip_future=skip_future)
+        head = head_matrix(params["embed"], cfg)
+        last = h[:, -1, :]
+        logits = (last @ head.astype(last.dtype)).astype(jnp.float32)
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens=None, embeds=None,
+                    shard_fn=lambda a, *n: a):
+        """One decode step.  tokens: (B,) i32 (or embeds (B,d)).
+        -> (logits (B,V) fp32, new_cache)."""
+        cfg = self.cfg
+        idx = cache["idx"]
+        if tokens is not None:
+            batch = {"tokens": tokens[:, None]}
+            b = tokens.shape[0]
+        else:
+            batch = {"embeds": embeds[:, None, :]}
+            b = embeds.shape[0]
+        pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+        if cfg.pos == "mrope":
+            pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+        batch["positions"] = pos
+        h, new_cache, _ = self.forward(params, batch, mode="decode",
+                                       cache=cache, shard_fn=shard_fn,
+                                       remat=False)
+        head = head_matrix(params["embed"], cfg)
+        logits = (h[:, 0, :] @ head.astype(h.dtype)).astype(jnp.float32)
+        return logits, new_cache

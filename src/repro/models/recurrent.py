@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x -> [W_x -> causal depthwise conv -> RG-LRU] * gelu(W_gate x) -> W_out.
+RG-LRU:  r_t = sigma(W_r u + b_r)          (recurrence gate)
+         i_t = sigma(W_i u + b_i)          (input gate)
+         log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence is associative, so prefill/train run a parallel
+``associative_scan`` (O(log T) depth — the sub-quadratic path that makes
+long_500k viable) and decode keeps an O(d) carry.  kernels/rglru provides
+the Pallas TPU kernel; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+RGLRU_C = 8.0
+
+
+def rglru_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    w = cfg.conv1d_width
+    return {
+        "w_x": ParamSpec((d, lru), ("embed", "lru")),
+        "w_gate_branch": ParamSpec((d, lru), ("embed", "lru")),
+        "conv": ParamSpec((w, lru), ("conv", "lru"), init="normal",
+                          scale=0.1),
+        "w_input_gate": ParamSpec((lru, lru), ("lru", "lru_in")),
+        "b_input_gate": ParamSpec((lru,), ("lru",), init="zeros"),
+        "w_rec_gate": ParamSpec((lru, lru), ("lru", "lru_in")),
+        "b_rec_gate": ParamSpec((lru,), ("lru",), init="zeros"),
+        "lam": ParamSpec((lru,), ("lru",), init="lambda_rglru"),
+        "w_out": ParamSpec((lru, d), ("lru", "embed")),
+    }
+
+
+def causal_conv1d(u, kernel, state=None):
+    """Depthwise causal conv.  u: (B, T, C); kernel: (W, C).
+    ``state``: (B, W-1, C) carry for decode; returns (out, new_state)."""
+    w = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * kernel[i].astype(u.dtype)
+              for i in range(w))
+    new_state = full[:, -(w - 1):] if w > 1 else None
+    return out, new_state
+
+
+def _rglru_gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32)
+                       + p["b_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_input_gate"].astype(jnp.float32)
+                       + p["b_input_gate"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a); clamp for numerical safety
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    x_in = beta * i * uf
+    return a, x_in
+
+
+def rglru_scan(p, u, h0=None):
+    """Parallel linear recurrence.  u: (B, T, lru) -> h: (B, T, lru)."""
+    a, x_in = _rglru_gates(p, u)
+    if h0 is not None:
+        # fold the carry into the first step: h_1 = a_1 h_0 + x_1
+        x_in = x_in.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(p, u_t, h_prev):
+    """Single decode step.  u_t: (B, lru); h_prev: (B, lru) fp32."""
+    a, x_in = _rglru_gates(p, u_t[:, None, :])
+    h = a[:, 0] * h_prev + x_in[:, 0]
+    return h.astype(u_t.dtype), h
+
+
+def apply_rglru_block(p, x, cfg: ArchConfig, cache=None):
+    """x: (B, T, d).  cache: None (train/prefill from zero) or
+    {"conv": (B, W-1, lru), "h": (B, lru) fp32} for decode (T == 1)."""
+    dt = x.dtype
+    lru_in = x @ p["w_x"].astype(dt)
+    gate = jax.nn.gelu((x @ p["w_gate_branch"].astype(dt)).astype(jnp.float32),
+                       approximate=True).astype(dt)
+    if cache is None:
+        u, _ = causal_conv1d(lru_in, p["conv"])
+        h = rglru_scan(p, u)
+        new_cache = None
+    elif x.shape[1] == 1:
+        u, conv_state = causal_conv1d(lru_in, p["conv"], cache["conv"])
+        h_t, h_f32 = rglru_step(p, u[:, 0], cache["h"])
+        h = h_t[:, None, :]
+        new_cache = {"conv": conv_state, "h": h_f32}
+    else:
+        # prefill with state capture
+        u, conv_state = causal_conv1d(lru_in, p["conv"], cache["conv"])
+        a, x_in = _rglru_gates(p, u)
+        x_in = x_in.at[:, 0].add(a[:, 0] * cache["h"])
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a2 * a1, a2 * b1 + b2
+
+        _, h_all = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+        h = h_all.astype(dt)
+        new_cache = {"conv": conv_state, "h": h_all[:, -1]}
+    out = (h * gate) @ p["w_out"].astype(dt)
+    return out, new_cache
+
+
+def rglru_cache_specs(cfg: ArchConfig, batch: int):
+    lru = cfg.lru_width or cfg.d_model
+    return {"conv": jax.ShapeDtypeStruct(
+                (batch, cfg.conv1d_width - 1, lru), jnp.dtype(cfg.compute_dtype)),
+            "h": jax.ShapeDtypeStruct((batch, lru), jnp.float32)}
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int):
+    lru = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv1d_width - 1, lru),
+                              jnp.dtype(cfg.compute_dtype)),
+            "h": jnp.zeros((batch, lru), jnp.float32)}

@@ -1,0 +1,332 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (parallelizable in principle; implemented as an exact time scan with
+stabilized exponential gating — Beck et al. 2024, arXiv:2405.04517):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    i'  = exp(i~ - m_t);   f' = exp(f~ + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' (v_t k_t^T)
+    n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+sLSTM keeps per-head scalar cells with recurrent block-diagonal weights —
+a true (non-associative) recurrence, scanned sequentially.
+
+Both blocks are self-contained (pre-norm, up/down projection, output
+gating) — the architecture has no separate FFN (d_ff = 0).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_group_norm
+from repro.models.params import ParamSpec
+from repro.models.recurrent import causal_conv1d
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    du = 2 * d
+    h = cfg.n_xlstm_heads
+    bs = cfg.xlstm_qkv_blocksize
+    if bs:
+        qkv = lambda: ParamSpec((du // bs, bs, bs),
+                                ("lru", "qkv_block", "qkv_block_in"))
+    else:
+        qkv = lambda: ParamSpec((du, du), ("lru", "lru_in"))
+    return {
+        "w_up": ParamSpec((d, 2 * du), ("embed", "lru")),
+        "conv": ParamSpec((cfg.conv1d_width, du), ("conv", "lru"),
+                          init="normal", scale=0.1),
+        "wq": qkv(),
+        "wk": qkv(),
+        "wv": qkv(),
+        "w_igate": ParamSpec((du, h), ("lru", "heads_x"), init="normal",
+                             scale=0.02),
+        "b_igate": ParamSpec((h,), ("heads_x",), init="zeros"),
+        "w_fgate": ParamSpec((du, h), ("lru", "heads_x"), init="normal",
+                             scale=0.02),
+        "b_fgate": ParamSpec((h,), ("heads_x",), init="ones"),
+        "gn_scale": ParamSpec((du,), ("lru",), init="ones"),
+        "skip": ParamSpec((du,), ("lru",), init="ones"),
+        "w_down": ParamSpec((du, d), ("lru", "embed")),
+    }
+
+
+def _mlstm_scan(q, k, v, igate, fgate, c0=None, n0=None, m0=None):
+    """q/k/v: (B, T, H, dh) fp32; igate/fgate: (B, T, H) pre-activations.
+    Returns h: (B, T, H, dh) and final (C, n, m)."""
+    b, t, nh, dh = q.shape
+    if c0 is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    logf = jax.nn.log_sigmoid(fgate)
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, lf = inp
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])        # (B,H,dv,dk)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (c, n, m_new), h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          igate.swapaxes(0, 1), logf.swapaxes(0, 1))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (c, n, m)
+
+
+def _mlstm_chunkwise(q, k, v, igate, fgate, chunk: int = 256,
+                     c0=None, n0=None, m0=None):
+    """Chunkwise-parallel mLSTM, exactly equivalent to :func:`_mlstm_scan`
+    (property-tested).  Within a chunk of length L the outputs are computed
+    with (L, L) decay matrices; across chunks only the (C, n, m) state is
+    carried — O(T/L) scan steps instead of O(T), which is what makes
+    training/prefill at 4k-32k feasible (the sequential scan would save a
+    (B, H, dh, dh) residual per TOKEN).
+
+    Derivation (stabilized, state scaled by exp(-m)):
+      b_i   = sum_{j<=i} log f_j            (intra-chunk cumulative decay)
+      g_i   = cummax_{j<=i} (i~_j - b_j)
+      m_i   = b_i + max(m0, g_i)            (running stabilizer)
+      h_i   = exp(m0 + b_i - m_i) C0 q_i
+              + sum_{j<=i} exp(b_i - b_j + i~_j - m_i) v_j (k_j . q_i)
+      den_i = same weights on (n0, k_j), max(|.|, exp(-m_i))
+      state': m' = b_L + max(m0, g_L);  C' / n' re-weighted accordingly.
+    """
+    b, t, nh, dh = q.shape
+    l = min(chunk, t)
+    assert t % l == 0, (t, l)
+    nc = t // l
+    if c0 is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+
+    qs = jnp.moveaxis(q.reshape(b, nc, l, nh, dh), 3, 2).swapaxes(0, 1)
+    ks = jnp.moveaxis(k.reshape(b, nc, l, nh, dh), 3, 2).swapaxes(0, 1)
+    vs = jnp.moveaxis(v.reshape(b, nc, l, nh, dh), 3, 2).swapaxes(0, 1)
+    igs = jnp.moveaxis(igate.reshape(b, nc, l, nh), 3, 2).swapaxes(0, 1)
+    lfs = jnp.moveaxis(jax.nn.log_sigmoid(fgate).reshape(b, nc, l, nh),
+                       3, 2).swapaxes(0, 1)
+    # shapes now: (nc, B, H, L[, dh])
+
+    def chunk_step(carry, xs):
+        c, n, m = carry                       # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, lfc = xs              # (B,H,L[,dh])
+        bvec = jnp.cumsum(lfc, axis=-1)       # b_i
+        g = jax.lax.cummax(ic - bvec, axis=2)
+        m_i = bvec + jnp.maximum(m[..., None], g)           # (B,H,L)
+        m_next = bvec[..., -1] + jnp.maximum(m, g[..., -1])
+
+        f32 = jnp.float32
+        ein = partial(jnp.einsum, preferred_element_type=f32)
+
+        # inter-chunk contribution
+        w0 = jnp.exp(m[..., None] + bvec - m_i)             # (B,H,L)
+        h_inter = ein("bhvk,bhlk->bhlv", c, qc.astype(f32)) * w0[..., None]
+        den_inter = ein("bhk,bhlk->bhl", n, qc.astype(f32)) * w0
+
+        # intra-chunk: D_ij = exp(b_i - b_j + i~_j - m_i) for j <= i
+        dmat = (bvec[..., :, None] - bvec[..., None, :]
+                + ic[..., None, :] - m_i[..., :, None])
+        tri = jnp.tril(jnp.ones((l, l), bool))
+        dmat = jnp.where(tri, dmat, -1e30)
+        w = jnp.exp(dmat)                                    # (B,H,L,L)
+        scores = ein("bhik,bhjk->bhij", qc, kc) * w
+        h_intra = ein("bhij,bhjv->bhiv", scores, vc)
+        den_intra = jnp.sum(scores, axis=-1)    # sum_j w_ij (k_j . q_i)
+
+        den = jnp.maximum(jnp.abs(den_inter + den_intra), jnp.exp(-m_i))
+        h = ((h_inter + h_intra) / den[..., None]).astype(qc.dtype)
+
+        # state update
+        wc = jnp.exp(m[..., None] + bvec[..., -1:] - m_next[..., None])
+        wj = jnp.exp(bvec[..., -1:] - bvec + ic - m_next[..., None])
+        c_new = (c * wc[..., None]
+                 + ein("bhj,bhjv,bhjk->bhvk", wj.astype(f32),
+                       vc.astype(f32), kc.astype(f32)))
+        n_new = n * wc + ein("bhj,bhjk->bhk", wj, kc.astype(f32))
+        return (c_new, n_new, m_next), h
+
+    step = jax.checkpoint(chunk_step, prevent_cse=False)
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), (qs, ks, vs, igs, lfs))
+    # (nc, B, H, L, dh) -> (B, T, H, dh)
+    hs = jnp.moveaxis(hs, 0, 1).swapaxes(2, 3).reshape(b, t, nh, dh)
+    return hs, (c, n, m)
+
+
+MLSTM_CHUNK = 256
+
+
+def apply_mlstm_block(p, x, cfg: ArchConfig, cache=None):
+    """x: (B, T, d).  cache: None or {"conv", "c", "n", "m"} for decode/
+    stateful prefill."""
+    dt = x.dtype
+    b, t, d = x.shape
+    du = 2 * d
+    nh = cfg.n_xlstm_heads
+    dh = du // nh
+
+    up = x @ p["w_up"].astype(dt)
+    main, side = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = causal_conv1d(main, p["conv"], conv_state)
+    long_seq = t >= 2 * MLSTM_CHUNK
+    xc = jax.nn.silu(conv_out.astype(jnp.float32))
+    if long_seq:
+        xc = xc.astype(dt)      # bf16 stream; fp32 accumulation in the core
+
+    def qkv_proj(inp, w):
+        wf = w.astype(inp.dtype)
+        if wf.ndim == 3:       # headwise block-diagonal projection
+            nb, bs, _ = wf.shape
+            return jnp.einsum("btnj,njk->btnk",
+                              inp.reshape(b, t, nb, bs), wf
+                              ).reshape(b, t, du)
+        return inp @ wf
+
+    vin = main if long_seq else main.astype(jnp.float32)
+    q = qkv_proj(xc, p["wq"]).reshape(b, t, nh, dh)
+    k = qkv_proj(xc, p["wk"]).reshape(b, t, nh, dh) * jnp.asarray(
+        dh ** -0.5, xc.dtype)
+    v = qkv_proj(vin, p["wv"]).reshape(b, t, nh, dh)
+    ig = (xc @ p["w_igate"].astype(xc.dtype)).astype(jnp.float32) \
+        + p["b_igate"].astype(jnp.float32)
+    fg = (xc @ p["w_fgate"].astype(xc.dtype)).astype(jnp.float32) \
+        + p["b_fgate"].astype(jnp.float32)
+
+    use_chunkwise = t >= 2 * MLSTM_CHUNK and t % MLSTM_CHUNK == 0
+    core = _mlstm_chunkwise if use_chunkwise else _mlstm_scan
+    if cache is None:
+        h, _ = core(q, k, v, ig, fg)
+        new_cache = None
+    else:
+        h, (c, n, m) = core(q, k, v, ig, fg, c0=cache["c"], n0=cache["n"],
+                            m0=cache["m"])
+        new_cache = {"conv": new_conv, "c": c, "n": n, "m": m}
+
+    h = h.reshape(b, t, du).astype(dt)
+    h = rms_group_norm(h, p["gn_scale"], nh)
+    h = h + p["skip"].astype(dt) * conv_out
+    out = (h * jax.nn.silu(side.astype(jnp.float32)).astype(dt)
+           ) @ p["w_down"].astype(dt)
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    du = 2 * d
+    nh = cfg.n_xlstm_heads
+    dh = du // nh
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, du),
+                          jnp.dtype(cfg.compute_dtype)),
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    nh = cfg.n_xlstm_heads
+    dh = d // nh
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ParamSpec((d, d), ("embed", "lru"))
+        # recurrent weights stay replicated: sharding a per-timestep-scan
+        # contraction would emit one psum per token step
+        gates[f"r_{g}"] = ParamSpec((nh, dh, dh),
+                                    ("heads_x", "head_rec", "head_rec_in"),
+                                    init="normal", scale=0.02)
+        gates[f"b_{g}"] = ParamSpec((d,), ("lru",),
+                                    init="ones" if g == "f" else "zeros")
+    gates["gn_scale"] = ParamSpec((d,), ("lru",), init="ones")
+    gates["w_out"] = ParamSpec((d, d), ("lru", "embed"))
+    return gates
+
+
+def _slstm_scan(p, x, state):
+    """x: (B, T, d) fp32.  state: (c, n, h, m) each (B, d) fp32 (m is (B,H))."""
+    b, t, d = x.shape
+    nh = p["r_z"].shape[0]
+    dh = d // nh
+
+    pre = {g: x @ p[f"w_{g}"].astype(jnp.float32)
+           + p[f"b_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def recur(h_prev, g):
+        hh = h_prev.reshape(b, nh, dh)
+        return jnp.einsum("bhk,hkl->bhl", hh,
+                          p[f"r_{g}"].astype(jnp.float32)).reshape(b, d)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        z_x, i_x, f_x, o_x = inp
+        zt = jnp.tanh(z_x + recur(h, "z"))
+        it = i_x + recur(h, "i")
+        ft = f_x + recur(h, "f")
+        ot = jax.nn.sigmoid(o_x + recur(h, "o"))
+        it_h = it.reshape(b, nh, dh)
+        ft_h = ft.reshape(b, nh, dh)
+        # stabilizer per head (max over the head's channels)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft_h).max(-1) + m,
+                            it_h.max(-1))
+        i_p = jnp.exp(it_h - m_new[..., None]).reshape(b, d)
+        f_p = jnp.exp(jax.nn.log_sigmoid(ft_h) + (m - m_new)[..., None]
+                      ).reshape(b, d)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    (c, n, h, m), hs = jax.lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1), (c, n, h, m)
+
+
+def apply_slstm_block(p, x, cfg: ArchConfig, cache=None):
+    dt = x.dtype
+    b, t, d = x.shape
+    nh = cfg.n_xlstm_heads
+    if cache is None:
+        state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32),
+                 jnp.full((b, nh), -1e30, jnp.float32))
+        hs, _ = _slstm_scan(p, x.astype(jnp.float32), state)
+        new_cache = None
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+        hs, (c, n, h, m) = _slstm_scan(p, x.astype(jnp.float32), state)
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    hs = rms_group_norm(hs.astype(dt), p["gn_scale"], nh)
+    return hs @ p["w_out"].astype(dt), new_cache
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    nh = cfg.n_xlstm_heads
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {"c": z(batch, d), "n": z(batch, d), "h": z(batch, d),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import (StragglerMitigator, Supervisor,
+                                           TransientWorkerFailure)
+
+__all__ = ["Supervisor", "StragglerMitigator", "TransientWorkerFailure"]

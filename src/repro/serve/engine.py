@@ -1,0 +1,111 @@
+"""Batched serving engine (wave scheduling).
+
+Requests are grouped into waves of equal prompt length (padding-free);
+each wave prefills BATCHED into a shared KV cache and decodes greedily
+until every member finishes (finished slots keep decoding into a masked
+void, their outputs dropped — the standard static-batching tradeoff).
+
+The decode step is the same jitted ``Model.decode_step`` the dry-run
+lowers, so serving exercises exactly the production path.  Per-slot
+position tracking (true continuous batching / paged KV) is the documented
+extension point — it requires per-sequence cache offsets, i.e. a paged
+attention kernel (DESIGN.md §5 notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: Optional[list] = None      # filled by the engine
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 512):
+        assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
+            "the wave engine serves decoder-only token models"
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.done: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, tokens=t))
+        self._prefill = jax.jit(
+            lambda p, b, c: self.model.prefill(p, b, c))
+
+    def submit(self, req: Request):
+        req.output = []
+        self.queue.append(req)
+
+    def _next_wave(self) -> List[Request]:
+        """Up to n_slots queued requests sharing one prompt length."""
+        if not self.queue:
+            return []
+        by_len = defaultdict(list)
+        for r in self.queue:
+            by_len[len(r.prompt)].append(r)
+        # largest group first (throughput)
+        length = max(by_len, key=lambda l: len(by_len[l]))
+        wave = by_len[length][: self.n_slots]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def _run_wave(self, wave: List[Request]):
+        b = len(wave)
+        plen = len(wave[0].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+        cache = self.model.init_cache(b, self.max_len)
+        logits, cache = self._prefill(self.params, {"tokens": prompts},
+                                      cache)
+        next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        remaining = np.array([r.max_new_tokens for r in wave], np.int64)
+        alive = np.ones(b, bool)
+        budget = min(self.max_len - plen - 1,
+                     int(max(remaining)))
+        for _ in range(max(0, budget)):
+            if not alive.any():
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(next_tok))
+            produced = next_tok.copy()
+            next_tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for i, r in enumerate(wave):
+                if not alive[i]:
+                    continue
+                r.output.append(int(produced[i]))
+                remaining[i] -= 1
+                if remaining[i] <= 0 or (r.eos_id is not None
+                                         and int(next_tok[i]) == r.eos_id):
+                    alive[i] = False
+        for i, r in enumerate(wave):
+            if alive[i]:          # wave budget exhausted
+                r.output.append(int(next_tok[i]))
+        self.done.extend(wave)
+
+    def run(self) -> List[Request]:
+        while self.queue:
+            wave = self._next_wave()
+            if not wave:
+                break
+            self._run_wave(wave)
+        return self.done

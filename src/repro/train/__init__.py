@@ -1,0 +1,3 @@
+from repro.train.loop import Trainer, TrainConfig
+
+__all__ = ["Trainer", "TrainConfig"]

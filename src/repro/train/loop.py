@@ -1,0 +1,139 @@
+"""Training loop: jit'd step + data + checkpointing + fault tolerance.
+
+Two step flavors:
+  * jit auto-SPMD (default; the dry-run path) — params sharded by the rule
+    set, gradient reduction inserted by XLA;
+  * shard_map DDP where gradient sync goes through the scalable-endpoints
+    engine (the paper's technique; used by examples + §Perf experiments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.core.endpoints import Category
+from repro.data.pipeline import SyntheticLMData
+from repro.launch.steps import make_ddp_train_step, make_train_step
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import (StragglerMitigator, Supervisor,
+                                           TransientWorkerFailure)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    n_steps: int = 100
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    checkpoint_dir: str = "checkpoints"
+    checkpoint_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    mode: str = "jit"            # jit | ddp
+    endpoint_category: Category = Category.TWO_X_DYNAMIC
+    mesh: Optional[Any] = None   # jit mode: optional mesh + rules
+    rules: Optional[dict] = None
+    remat: bool = True
+    accum_steps: int = 1
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tc: TrainConfig):
+        self.cfg = cfg
+        self.tc = tc
+        self.model = Model(cfg)
+        self.opt = AdamW(learning_rate=cosine_schedule(
+            tc.peak_lr, tc.warmup_steps, tc.n_steps))
+        self.data = SyntheticLMData(vocab=cfg.vocab, seq_len=tc.seq_len,
+                                    global_batch=tc.global_batch,
+                                    seed=tc.seed)
+        self.ckpt = CheckpointManager(tc.checkpoint_dir)
+        self.metrics_log = []
+
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = self.model.init(key)
+        self.opt_state = self.opt.init(self.params)
+        self.comp_state = ()
+
+        if tc.mode == "ddp":
+            assert tc.mesh is not None
+            self._step, self.engine = make_ddp_train_step(
+                self.model, self.opt, tc.mesh,
+                category=tc.endpoint_category)
+            self._step = jax.jit(self._step)
+        else:
+            shard_fn = (lambda a, *n: a)
+            if tc.mesh is not None and tc.rules is not None:
+                from repro.launch.sharding import make_shard_fn
+                shard_fn = make_shard_fn(tc.rules, tc.mesh)
+            self._step = jax.jit(make_train_step(
+                self.model, self.opt, shard_fn=shard_fn, remat=tc.remat,
+                accum_steps=tc.accum_steps))
+
+    # ------------------------------------------------------------------
+    def _train_state(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def _one_step(self, step: int):
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in self.data.batch_at(step).items()}
+        if self.tc.mode == "ddp":
+            self.params, self.opt_state, metrics, self.comp_state = \
+                self._step(self.params, self.opt_state, batch,
+                           self.comp_state)
+        else:
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+        if (step + 1) % self.tc.checkpoint_every == 0:
+            self.ckpt.save_async(step + 1, self._train_state())
+        if step % self.tc.log_every == 0 or step == self.tc.n_steps - 1:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step"] = step
+            self.metrics_log.append(m)
+        return metrics
+
+    def _restore(self) -> int:
+        """Restore the latest complete checkpoint; -> resume step."""
+        out = self.ckpt.restore_latest(self._train_state())
+        step, state = out
+        if step is None:
+            key = jax.random.PRNGKey(self.tc.seed)
+            self.params = self.model.init(key)
+            self.opt_state = self.opt.init(self.params)
+            return 0
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        return step
+
+    def train(self, failure_injector: Optional[Callable] = None,
+              straggler: Optional[StragglerMitigator] = None) -> list:
+        """Run to n_steps under the supervisor.  ``failure_injector(step)``
+        may raise TransientWorkerFailure (tests/chaos)."""
+
+        def step_fn(step):
+            if failure_injector is not None:
+                failure_injector(step)
+            return self._one_step(step)
+
+        sup = Supervisor(step_fn, self._restore, straggler=straggler)
+        sup.run(0, self.tc.n_steps)
+        self.ckpt.wait()
+        self.ckpt.save(self.tc.n_steps, self._train_state())
+        return self.metrics_log
+
+    def save_metrics(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            for m in self.metrics_log:
+                f.write(json.dumps(m) + "\n")

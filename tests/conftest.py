@@ -1,0 +1,11 @@
+import os
+import sys
+
+# src layout without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — the
+# smoke tests and benches must see the real single device.  Tests that need
+# many devices (sharding/collective tests) spawn subprocesses that set
+# XLA_FLAGS before importing jax.

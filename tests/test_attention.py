@@ -1,0 +1,113 @@
+"""Attention: chunked (flash-style) == reference, windows, decode, M-RoPE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.attention import (attention_chunked, attention_decode,
+                                    attention_reference)
+from repro.models.layers import apply_rope
+
+
+def _qkv(key, b, sq, sk, hq, hkv, dh, dt=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, sq, hq, dh), dt),
+            jax.random.normal(ks[1], (b, sk, hkv, dh), dt),
+            jax.random.normal(ks[2], (b, sk, hkv, dh), dt))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32),
+                                           (False, 0)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (6, 2), (5, 1)])
+def test_chunked_matches_reference(causal, window, hq, hkv):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 128, hq, hkv, 16)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    out = attention_chunked(q, k, v, causal=causal, window=window,
+                            q_block=32, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_skip_future_blocks_equivalent():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 256, 256, 4, 2, 16)
+    full = attention_chunked(q, k, v, causal=True, q_block=64, kv_block=64)
+    skip = attention_chunked(q, k, v, causal=True, q_block=64, kv_block=64,
+                             skip_future_blocks=True)
+    np.testing.assert_allclose(np.asarray(skip), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_reference_row():
+    """decode at position t == row t of full causal attention."""
+    b, s, hq, hkv, dh = 2, 24, 4, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(2), b, s, s, hq, hkv, dh)
+    full = attention_reference(q, k, v, causal=True)
+    for t in (0, 5, 23):
+        out = attention_decode(q[:, t:t + 1], k, v,
+                               jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(t))
+
+
+def test_decode_valid_mask_rolling():
+    """A rolling-window cache (entries permuted) gives the same output as
+    the windowed full computation."""
+    b, s, h, dh, window = 1, 16, 2, 8, 8
+    q, k, v = _qkv(jax.random.PRNGKey(3), b, s, s, h, h, dh)
+    t = 12
+    full = attention_reference(q, k, v, causal=True, window=window)
+    # build the rolling buffer for position t: slot j holds pos
+    # t - ((t - j) % window)
+    slots = [(t - ((t - j) % window)) for j in range(window)]
+    k_roll = k[:, slots]
+    v_roll = v[:, slots]
+    out = attention_decode(q[:, t:t + 1], k_roll, v_roll,
+                           jnp.asarray(t, jnp.int32),
+                           valid_mask=jnp.ones((window,), bool))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, t]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_softcap_changes_and_bounds_scores():
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 32, 32, 2, 2, 8)
+    plain = attention_reference(q * 10, k * 10, v, causal=True)
+    capped = attention_reference(q * 10, k * 10, v, causal=True,
+                                 softcap=5.0)
+    assert not np.allclose(np.asarray(plain), np.asarray(capped))
+
+
+def test_mrope_sections_and_equivalence():
+    """With equal (t, h, w) position streams, M-RoPE == plain RoPE with
+    matching per-section frequencies; different streams differ."""
+    cfg = get_smoke_config("qwen2-vl-72b")
+    b, s, h, dh = 2, 12, 4, cfg.head_dim
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, dh))
+    pos1d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3d = jnp.broadcast_to(pos1d[..., None], (b, s, 3))
+    out3 = apply_rope(x, pos3d, cfg)
+    cfg1d = dataclasses.replace(cfg, pos="rope")
+    out1 = apply_rope(x, pos1d, cfg1d)
+    np.testing.assert_allclose(np.asarray(out3), np.asarray(out1),
+                               rtol=1e-5, atol=1e-5)
+    pos3d_mixed = pos3d.at[..., 1].add(3)
+    out_mixed = apply_rope(x, pos3d_mixed, cfg)
+    assert not np.allclose(np.asarray(out_mixed), np.asarray(out3))
+
+
+def test_partial_rope_rotates_fraction():
+    cfg = dataclasses.replace(get_smoke_config("stablelm-1.6b"),
+                              rope_fraction=0.25, d_head=16)
+    b, s, h, dh = 1, 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, s, h, dh))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = apply_rope(x, pos, cfg)
+    rot = int(dh * 0.25)
+    np.testing.assert_array_equal(np.asarray(out[..., rot:]),
+                                  np.asarray(x[..., rot:]))
+    assert not np.allclose(np.asarray(out[..., :rot]),
+                           np.asarray(x[..., :rot]))

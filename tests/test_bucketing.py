@@ -1,0 +1,85 @@
+"""Property tests: bucketing is a lossless, deterministic partition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.comm.bucketing import make_bucket_plan, pack_buckets, unpack_buckets
+from repro.core.channels import ChannelPlan, plan_for
+from repro.core.endpoints import Category
+
+
+def _random_tree(rng, n_leaves):
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(rng.integers(1, 9, size=rng.integers(0, 3)))
+        dtype = rng.choice([np.float32, np.float16, np.int32])
+        tree[f"leaf{i}"] = jnp.asarray(
+            rng.standard_normal(shape).astype(dtype))
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_leaves=st.integers(1, 24),
+       cat=st.sampled_from(list(Category)))
+def test_pack_unpack_roundtrip(seed, n_leaves, cat):
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng, n_leaves)
+    plan = plan_for(cat)
+    bplan = make_bucket_plan(tree, plan)
+    packed = pack_buckets(tree, bplan)
+    out = unpack_buckets(packed, bplan)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(tree[k]), err_msg=k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_leaves=st.integers(1, 30))
+def test_every_leaf_in_exactly_one_bucket(seed, n_leaves):
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng, n_leaves)
+    plan = plan_for(Category.DYNAMIC)
+    bplan = make_bucket_plan(tree, plan)
+    assert sorted(range(n_leaves)) == sorted(
+        s.leaf for b in bplan.buckets for _, (_, segs) in b.items()
+        for s in segs)
+    assert len(bplan.leaf_bucket) == n_leaves
+
+
+def test_bucket_counts_per_category():
+    tree = {f"l{i}": jnp.zeros((16,)) for i in range(40)}
+    expect = {Category.MPI_EVERYWHERE: 40, Category.TWO_X_DYNAMIC: 16,
+              Category.DYNAMIC: 16, Category.SHARED_DYNAMIC: 8,
+              Category.STATIC: 4, Category.MPI_THREADS: 1}
+    for cat, n in expect.items():
+        bplan = make_bucket_plan(tree, plan_for(cat))
+        assert bplan.n_buckets == n, cat
+
+
+def test_buckets_byte_balanced():
+    rng = np.random.default_rng(0)
+    tree = {f"l{i}": jnp.zeros((int(rng.integers(10, 2000)),))
+            for i in range(64)}
+    bplan = make_bucket_plan(tree, plan_for(Category.DYNAMIC))
+    sizes = bplan.bucket_bytes()
+    assert max(sizes) <= 2 * (sum(sizes) / len(sizes)) + 8192
+
+
+def test_segments_lane_aligned():
+    tree = {"a": jnp.zeros((3,), jnp.float32),
+            "b": jnp.zeros((130,), jnp.float32)}
+    bplan = make_bucket_plan(tree, plan_for(Category.MPI_THREADS))
+    for b in bplan.buckets:
+        for _, (_, segs) in b.items():
+            for s in segs:
+                assert s.offset % 32 == 0          # 128B / 4B lanes
+                assert s.padded_size % 32 == 0
+
+
+def test_deterministic_plan():
+    tree = {f"l{i}": jnp.zeros((i + 1, 7)) for i in range(20)}
+    p1 = make_bucket_plan(tree, plan_for(Category.DYNAMIC))
+    p2 = make_bucket_plan(tree, plan_for(Category.DYNAMIC))
+    assert p1.leaf_bucket == p2.leaf_bucket

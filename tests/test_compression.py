@@ -1,0 +1,54 @@
+"""Int8 error-feedback compressor properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.comm.compression import Int8Compressor
+
+
+def _fake_psum(x):
+    return x            # single participant
+
+
+def _fake_pmax(x):
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 2000))
+def test_single_round_error_bounded(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    comp = Int8Compressor()
+    out, res = comp.reduce(x, jnp.zeros_like(x), _fake_psum, _fake_pmax)
+    # quantization error bounded by scale/2 per element
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(out - x))) <= scale * 0.75 + 1e-7
+    np.testing.assert_allclose(np.asarray(res), np.asarray(x - out),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_reduces_bias():
+    """Repeatedly compressing the SAME gradient with EF: the accumulated
+    transmitted mass converges to the true value (unbiased on average)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    comp = Int8Compressor()
+    res = jnp.zeros_like(x)
+    sent = jnp.zeros_like(x)
+    for _ in range(50):
+        out, res = comp.reduce(x, res, _fake_psum, _fake_pmax)
+        sent = sent + out
+    mean_sent = sent / 50
+    np.testing.assert_allclose(np.asarray(mean_sent), np.asarray(x),
+                               rtol=0.02, atol=0.02)
+
+
+def test_zero_input():
+    comp = Int8Compressor()
+    x = jnp.zeros((64,), jnp.float32)
+    out, res = comp.reduce(x, jnp.zeros_like(x), _fake_psum, _fake_pmax)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,81 @@
+"""Assigned-architecture configs: exact numbers from the assignment table
++ full-config parameter counts within the published class."""
+
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models.model import Model
+
+SPEC = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+}
+
+PARAM_RANGE = {       # billions, generous class bounds
+    "qwen2-vl-72b": (65, 78), "recurrentgemma-2b": (2.4, 3.2),
+    "qwen2-0.5b": (0.4, 0.6), "stablelm-1.6b": (1.4, 1.9),
+    "smollm-360m": (0.3, 0.45), "internlm2-1.8b": (1.6, 2.1),
+    "seamless-m4t-large-v2": (1.0, 1.8), "deepseek-moe-16b": (15, 18),
+    "granite-moe-1b-a400m": (1.0, 1.6), "xlstm-1.3b": (1.1, 1.6),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_spec_numbers(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = SPEC[arch]
+    assert cfg.n_layers == l and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+
+
+def test_moe_specs():
+    ds = get_config("deepseek-moe-16b").moe
+    assert (ds.n_routed, ds.top_k, ds.n_shared) == (64, 6, 2)
+    gr = get_config("granite-moe-1b-a400m").moe
+    assert (gr.n_routed, gr.top_k, gr.n_shared) == (32, 8, 0)
+
+
+def test_family_structure():
+    assert get_config("recurrentgemma-2b").block_pattern == (
+        "rglru", "rglru", "attn_local")
+    assert get_config("recurrentgemma-2b").attn_window == 2048
+    assert get_config("xlstm-1.3b").block_pattern.count("slstm") == 1
+    assert len(get_config("xlstm-1.3b").block_pattern) == 8
+    assert get_config("seamless-m4t-large-v2").n_enc_layers == 24
+    assert get_config("qwen2-vl-72b").pos == "mrope"
+    assert sum(get_config("qwen2-vl-72b").mrope_sections) == 64
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_in_class(arch):
+    n = Model(get_config(arch)).n_params() / 1e9
+    lo, hi = PARAM_RANGE[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_configs_same_family(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.family == full.family
+    assert (smoke.moe is None) == (full.moe is None)
+    assert smoke.is_encdec == full.is_encdec
+    assert smoke.input_mode == full.input_mode
+    assert set(smoke.block_pattern) == set(full.block_pattern)
+    assert smoke.d_model <= 128 and smoke.vocab <= 512
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_long_context_applicability(arch):
+    cfg = get_config(arch)
+    sub_quadratic = arch in ("recurrentgemma-2b", "xlstm-1.3b")
+    assert cfg.sub_quadratic == sub_quadratic

@@ -1,0 +1,46 @@
+"""Alpha-beta collective cost model properties."""
+
+from repro.comm.costs import estimate_sync_time, ring_allreduce_seconds
+from repro.core.channels import plan_for
+from repro.core.endpoints import Category
+
+
+def test_ring_allreduce_scaling():
+    a1, b1 = ring_allreduce_seconds(1e9, 16)
+    a2, b2 = ring_allreduce_seconds(2e9, 16)
+    assert abs(b2 / b1 - 2.0) < 1e-9       # beta linear in bytes
+    assert a1 == a2                        # alpha independent of bytes
+    a_big, _ = ring_allreduce_seconds(1e9, 256)
+    assert a_big > a1                      # more hops, more latency
+
+
+def test_degenerate_axis():
+    assert ring_allreduce_seconds(1e9, 1) == (0.0, 0.0)
+
+
+def test_per_tensor_alpha_dominated_vs_bucketed():
+    """Many small buckets pay more latency than few big ones (Postlist)."""
+    small = [4096.0] * 512
+    big = [4096.0 * 128] * 4
+    per_tensor = estimate_sync_time(small, plan_for(Category.MPI_EVERYWHERE),
+                                    axis_size=16)
+    bucketed = estimate_sync_time(big, plan_for(Category.DYNAMIC),
+                                  axis_size=16)
+    assert per_tensor.alpha_seconds > bucketed.alpha_seconds
+    assert abs(per_tensor.beta_seconds - bucketed.beta_seconds) < 1e-9
+
+
+def test_serialized_pays_full_alpha_chain():
+    buckets = [1e6] * 8
+    fused = estimate_sync_time(buckets, plan_for(Category.MPI_THREADS),
+                               axis_size=16)
+    chan = estimate_sync_time(buckets, plan_for(Category.DYNAMIC),
+                              axis_size=16)
+    assert fused.seconds >= chan.seconds
+
+
+def test_double_buffering_hides_alpha():
+    buckets = [1e6] * 16
+    dyn = estimate_sync_time(buckets, plan_for(Category.DYNAMIC), 16)
+    dbl = estimate_sync_time(buckets, plan_for(Category.TWO_X_DYNAMIC), 16)
+    assert dbl.alpha_seconds <= dyn.alpha_seconds

@@ -1,0 +1,74 @@
+"""Data pipeline determinism/sharding + AdamW reference math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import SyntheticLMData
+from repro.optim.adamw import AdamW, cosine_schedule
+
+
+def test_data_deterministic():
+    d = SyntheticLMData(vocab=100, seq_len=16, global_batch=4, seed=7)
+    b1, b2 = d.batch_at(3), d.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_labels_are_shifted_stream():
+    d = SyntheticLMData(vocab=97, seq_len=16, global_batch=2, seed=0)
+    b = d.batch_at(0)
+    # labels[t] is the stream's next token — structure a model can learn:
+    # consecutive positions advance by a constant (a + c*[64-boundary])
+    diffs = (b["labels"][:, :8] - b["tokens"][:, :8]) % 97
+    assert (diffs == diffs[:, :1]).all()
+
+
+def test_data_host_shards_disjoint():
+    full = SyntheticLMData(vocab=100, seq_len=8, global_batch=8, seed=1)
+    h0 = SyntheticLMData(vocab=100, seq_len=8, global_batch=8, seed=1,
+                         n_hosts=2, host_id=0)
+    h1 = SyntheticLMData(vocab=100, seq_len=8, global_batch=8, seed=1,
+                         n_hosts=2, host_id=1)
+    assert h0.host_batch == 4 and h1.host_batch == 4
+    b0, b1 = h0.batch_at(0), h1.batch_at(0)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_adamw_matches_reference_step():
+    opt = AdamW(learning_rate=lambda s: 0.1, b1=0.9, b2=0.99, eps=1e-8,
+                weight_decay=0.01, clip_norm=0.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    state = opt.init(p)
+    updates, state, _ = opt.update(g, state, p)
+    # manual: m=0.1g, v=0.01g^2, mhat=g, vhat=g^2 -> step ~ g/|g| = sign
+    mhat = 0.1 * np.asarray(g["w"]) / (1 - 0.9)
+    vhat = 0.01 * np.asarray(g["w"]) ** 2 / (1 - 0.99)
+    expect = -0.1 * (mhat / (np.sqrt(vhat) + 1e-8)
+                     + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(updates["w"]), expect, rtol=1e-5)
+
+
+def test_adamw_clip():
+    opt = AdamW(learning_rate=lambda s: 1.0, clip_norm=1.0,
+                weight_decay=0.0)
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.asarray([30.0, 40.0, 0.0])}    # norm 50
+    state = opt.init(p)
+    _, state, gnorm = opt.update(g, state, p)
+    assert abs(float(gnorm) - 50.0) < 1e-4
+    # clipped gradient norm is 1 -> m = 0.1 * g/50
+    np.testing.assert_allclose(np.asarray(state["mu"]["w"]),
+                               [0.06, 0.08, 0.0], rtol=1e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup_steps=10, total_steps=110,
+                         final_frac=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert abs(float(lr(jnp.asarray(110))) - 0.1) < 1e-6
+    mid = float(lr(jnp.asarray(60)))
+    assert 0.5 < mid < 0.6

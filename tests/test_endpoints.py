@@ -1,0 +1,100 @@
+"""Resource accounting asserted against every number the paper states."""
+
+import pytest
+
+from repro.core import (Category, EndpointModel, naive_td_per_ctx_usage)
+from repro.core import resources as R
+
+
+def test_table1_memory():
+    assert R.CTX_BYTES == 256 * 1024
+    assert R.QP_BYTES == 80 * 1024
+    assert R.CQ_BYTES == 9 * 1024
+    assert R.PD_BYTES == 144 and R.MR_BYTES == 144
+    # CTX occupies 74.2% of one endpoint (Section III)
+    assert abs(R.CTX_BYTES / R.ENDPOINT_BYTES - 0.742) < 0.002
+
+
+def test_naive_endpoints_94_percent_waste():
+    u = naive_td_per_ctx_usage(16)
+    # 18 uUARs per thread, 1 used (Section III)
+    assert u.uuars == 288 and u.uuars_used == 16
+    assert abs(u.waste_fraction - 17 / 18) < 1e-9
+    # Fig 3 right axis: QP+CQ memory 89 KB/thread -> 1.39 MB at 16
+    assert u.sw_memory_bytes == 16 * 89 * 1024
+
+
+def test_mpi_everywhere_waste_93_75():
+    m = EndpointModel.build(Category.MPI_EVERYWHERE, 16)
+    assert m.usage.uuars == 256 and m.usage.uuars_used == 16
+    assert abs(m.usage.waste_fraction - 0.9375) < 1e-9        # Fig 2(a)
+    # 16 endpoints -> 5.39 MB (Section VII)
+    assert abs(m.usage.memory_bytes / 2**20 - 5.39) < 0.02
+
+
+@pytest.mark.parametrize("cat,uuars,rel", [
+    (Category.TWO_X_DYNAMIC, 80, 0.3125),     # "80 uUARs instead of 288"
+    (Category.DYNAMIC, 48, 0.1875),
+    (Category.SHARED_DYNAMIC, 32, 0.125),
+    (Category.STATIC, 16, 0.0625),
+    (Category.MPI_THREADS, 16, 0.0625),
+])
+def test_category_hardware_usage(cat, uuars, rel):
+    m = EndpointModel.build(cat, 16)
+    assert m.usage.uuars == uuars
+    assert abs(m.relative_usage()["uuars"] - rel) < 1e-9
+
+
+def test_2xdynamic_active_memory_paper_quote():
+    """Section VII: 1.64 MB vs 5.39 MB -> 3.27x lower."""
+    m2x = EndpointModel.build(Category.TWO_X_DYNAMIC, 16)
+    base = EndpointModel.build(Category.MPI_EVERYWHERE, 16)
+    assert abs(m2x.usage.memory_bytes_active / 2**20 - 1.64) < 0.02
+    ratio = base.usage.memory_bytes / m2x.usage.memory_bytes_active
+    assert abs(ratio - 3.27) < 0.05
+
+
+def test_2xdynamic_wastes_odd_tds():
+    m = EndpointModel.build(Category.TWO_X_DYNAMIC, 16)
+    assert m.usage.qps == 32 and m.usage.qps_active == 16
+    assert m.usage.tds == 32
+
+
+def test_mpi_threads_minimal():
+    m = EndpointModel.build(Category.MPI_THREADS, 16)
+    u = m.usage
+    assert (u.qps, u.cqs, u.ctxs) == (1, 1, 1)
+    assert all(p.qp_shared_by == 16 for p in m.paths)
+    assert all(p.sharing_level == 4 for p in m.paths)
+
+
+def test_sharing_levels_per_category():
+    lv = {Category.MPI_EVERYWHERE: 1, Category.TWO_X_DYNAMIC: 1,
+          Category.DYNAMIC: 1, Category.SHARED_DYNAMIC: 2,
+          Category.MPI_THREADS: 4}
+    for cat, expected in lv.items():
+        m = EndpointModel.build(cat, 16)
+        assert m.category.level == expected
+        if cat != Category.MPI_EVERYWHERE:
+            dominant = max(set(p.sharing_level for p in m.paths),
+                           key=[p.sharing_level for p in m.paths].count)
+            assert dominant == expected, cat
+
+
+def test_static_mixes_levels_2_and_3():
+    """Section VI: with 16 QPs the 5th and 16th share a uUAR (level 3),
+    the rest sit at level 2."""
+    m = EndpointModel.build(Category.STATIC, 16)
+    levels = [p.sharing_level for p in m.paths]
+    assert levels.count(3) == 2
+    assert m.usage.uuars_used == 15
+
+
+def test_qp_lock_elision_for_tds():
+    """The paper's mlx5 optimization: TD-assigned QPs drop the QP lock."""
+    for cat in (Category.TWO_X_DYNAMIC, Category.DYNAMIC,
+                Category.SHARED_DYNAMIC):
+        m = EndpointModel.build(cat, 16)
+        assert not any(p.qp_lock for p in m.paths), cat
+    m = EndpointModel.build(Category.MPI_EVERYWHERE, 16)
+    assert all(p.qp_lock for p in m.paths)     # lock exists, uncontended

@@ -1,0 +1,82 @@
+"""Simulator calibration pinned to the paper's reported ratios.
+
+The cost model was calibrated ONCE (see core/ibsim/costmodel.py); these
+tests fail if it drifts away from the paper's numbers."""
+
+import pytest
+
+from repro.core import Category
+from repro.core.ibsim.benchmark import category_table, message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES, CONSERVATIVE
+from repro.core import build_cq_shared, build_ctx_shared, build_qp_shared
+
+MSGS = 2048
+
+
+@pytest.fixture(scope="module")
+def conservative_table():
+    return category_table(16, features=CONSERVATIVE, msgs_per_thread=MSGS)
+
+
+# paper Section VII / Fig 12: 108 / (100) / 94 / 65 / 64 / 3 %
+PAPER = {Category.TWO_X_DYNAMIC: (1.08, 0.05),
+         Category.DYNAMIC: (0.94, 0.05),
+         Category.SHARED_DYNAMIC: (0.65, 0.06),
+         Category.STATIC: (0.64, 0.08),
+         Category.MPI_THREADS: (0.03, 0.02)}
+
+
+@pytest.mark.parametrize("cat", list(PAPER))
+def test_category_ratio_matches_paper(conservative_table, cat):
+    target, tol = PAPER[cat]
+    got = conservative_table[cat]["vs_everywhere"]
+    assert abs(got - target) <= tol, (cat, got, target)
+
+
+def test_category_ordering(conservative_table):
+    r = {c: d["result"].rate_mmps for c, d in conservative_table.items()}
+    assert r[Category.TWO_X_DYNAMIC] > r[Category.MPI_EVERYWHERE] \
+        > r[Category.DYNAMIC] > r[Category.SHARED_DYNAMIC] \
+        >= r[Category.STATIC] > r[Category.MPI_THREADS]
+
+
+def test_ctx_sharing_flat_with_postlist():
+    """Fig 7: CTX sharing does not hurt when Postlist is on."""
+    full = message_rate(build_ctx_shared(16, 1), features=ALL_FEATURES,
+                        msgs_per_thread=MSGS)
+    shared = message_rate(build_ctx_shared(16, 16), features=ALL_FEATURES,
+                          msgs_per_thread=MSGS)
+    assert abs(shared.rate_mmps / full.rate_mmps - 1.0) < 0.02
+
+
+def test_ctx_sharing_anomaly_and_2xqps_fix():
+    """Fig 7 w/o Postlist: ~1.15x drop from 8-way to 16-way; creating 2x
+    TDs and using every other eliminates it."""
+    f = ALL_FEATURES.without("postlist")
+    r8 = message_rate(build_ctx_shared(16, 8), features=f,
+                      msgs_per_thread=MSGS).rate_mmps
+    r16 = message_rate(build_ctx_shared(16, 16), features=f,
+                       msgs_per_thread=MSGS).rate_mmps
+    r2x = message_rate(build_ctx_shared(16, 16, two_x=True), features=f,
+                       msgs_per_thread=MSGS).rate_mmps
+    assert 1.10 <= r8 / r16 <= 1.25
+    assert abs(r2x / r8 - 1.0) < 0.03
+
+
+def test_cq_sharing_18x_drop():
+    """Fig 9/10: 16-way CQ sharing w/o Unsignaled ~ 18x drop."""
+    f = ALL_FEATURES.without("unsignaled")
+    base = message_rate(build_cq_shared(16, 1), features=f,
+                        msgs_per_thread=MSGS).rate_mmps
+    r16 = message_rate(build_cq_shared(16, 16), features=f,
+                       msgs_per_thread=MSGS).rate_mmps
+    assert 14 <= base / r16 <= 24
+
+
+def test_qp_sharing_monotone_decline():
+    """Fig 11: throughput declines monotonically with QP sharing."""
+    rates = [message_rate(build_qp_shared(16, w), features=ALL_FEATURES,
+                          msgs_per_thread=MSGS).rate_mmps
+             for w in (1, 2, 4, 8, 16)]
+    assert all(a >= b for a, b in zip(rates, rates[1:]))
+    assert rates[0] / rates[-1] >= 5         # "up to 7x worse"

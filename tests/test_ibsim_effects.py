@@ -1,0 +1,63 @@
+"""Directional resource-sharing effects (paper Section V)."""
+
+from repro.core import build_ctx_shared
+from repro.core.ibsim.benchmark import message_rate
+from repro.core.ibsim.costmodel import ALL_FEATURES, BufferConfig
+
+MSGS = 2048
+
+
+def _rate(m, feats, bufs=None):
+    return message_rate(m, features=feats, buffers=bufs,
+                        msgs_per_thread=MSGS).rate_mmps
+
+
+def test_buf_sharing_hurts_only_without_inlining():
+    """Fig 5: BUF sharing serializes NIC TLB rails only when the NIC
+    DMA-reads the payload."""
+    m = build_ctx_shared(16, 1)
+    no_inline = ALL_FEATURES.without("inline")
+    r1 = _rate(m, no_inline, BufferConfig.shared(16, 1))
+    r16 = _rate(m, no_inline, BufferConfig.shared(16, 16))
+    assert r1 / r16 > 3          # strong serialization
+    r1i = _rate(m, ALL_FEATURES, BufferConfig.shared(16, 1))
+    r16i = _rate(m, ALL_FEATURES, BufferConfig.shared(16, 16))
+    assert abs(r1i / r16i - 1.0) < 0.02      # flat with inlining
+
+
+def test_cache_alignment_effect():
+    """Fig 6: unaligned 2-byte buffers land on one cache line and
+    serialize, aligned ones do not."""
+    m = build_ctx_shared(16, 1)
+    f = ALL_FEATURES.without("inline")
+    aligned = _rate(m, f, BufferConfig.aligned(16))
+    unaligned = _rate(m, f, BufferConfig.unaligned(16, 2))
+    assert aligned / unaligned > 3
+
+
+def test_feature_ablations_all_hurt():
+    """Fig 3: removing any feature reduces throughput for 16 naive
+    endpoints.  BlueFlame only engages at Postlist=1 (the paper: "BlueFlame
+    is not used with Postlist"), so its ablation is tested there."""
+    m = build_ctx_shared(16, 1)
+    base = _rate(m, ALL_FEATURES)
+    for f in ("postlist", "unsignaled", "inline"):
+        assert _rate(m, ALL_FEATURES.without(f)) < base, f
+    no_pl = ALL_FEATURES.without("postlist")
+    assert _rate(m, no_pl.without("blueflame")) < _rate(m, no_pl)
+
+
+def test_sharing2_worse_than_independent():
+    """Fig 7: hardcoded second-level sharing (UAR shared) is worse than
+    maximally independent TDs without Postlist."""
+    from repro.core import TDSharing
+    f = ALL_FEATURES.without("postlist")
+    indep = _rate(build_ctx_shared(16, 16), f)
+    share2 = _rate(build_ctx_shared(
+        16, 16, td_sharing=TDSharing.SHARED_UAR), f)
+    assert indep / share2 > 1.2
+
+
+def test_rates_deterministic():
+    m = build_ctx_shared(16, 16)
+    assert _rate(m, ALL_FEATURES) == _rate(m, ALL_FEATURES)

@@ -1,0 +1,97 @@
+"""Custom-VJP norms (gradcheck vs autodiff oracle) + chunked xent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import apply_norm
+from repro.models.losses import chunked_softmax_xent
+
+
+def _ref_norm(p, x, kind):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf ** 2, -1, keepdims=True) + 1e-6)
+        return y * p["scale"]
+    mu = jnp.mean(xf, -1, keepdims=True)
+    v = jnp.var(xf, -1, keepdims=True)
+    return (xf - mu) * jax.lax.rsqrt(v + 1e-6) * p["scale"] + p["bias"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), kind=st.sampled_from(["rmsnorm",
+                                                        "layernorm"]),
+       d=st.sampled_from([8, 32, 64]))
+def test_norm_gradcheck(seed, kind, d):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 5, d)) * 1.7 + 0.2
+    p = {"scale": jnp.ones((d,)) * 1.1}
+    if kind == "layernorm":
+        p["bias"] = jnp.full((d,), 0.3)
+
+    def f(x, p):
+        return jnp.sum(jnp.sin(apply_norm(p, x, kind)))
+
+    def ref(x, p):
+        return jnp.sum(jnp.sin(_ref_norm(p, x, kind)))
+
+    gx, gp = jax.grad(f, argnums=(0, 1))(x, p)
+    rx, rp = jax.grad(ref, argnums=(0, 1))(x, p)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                               rtol=1e-4, atol=1e-5)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(gp[k]), np.asarray(rp[k]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_norm_bf16_path_no_f32_blowup():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 32), jnp.bfloat16)
+    p = {"scale": jnp.ones((32,), jnp.float32)}
+    out = apply_norm(p, x, "rmsnorm")
+    assert out.dtype == jnp.bfloat16
+    ref = _ref_norm(p, x, "rmsnorm")
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), chunk=st.sampled_from([3, 8, 64]))
+def test_chunked_xent_equals_dense(seed, chunk):
+    key = jax.random.PRNGKey(seed)
+    b, s, d, v = 2, 13, 16, 50
+    h = jax.random.normal(key, (b, s, d))
+    head = jax.random.normal(jax.random.fold_in(key, 1), (d, v)) * 0.2
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, v)
+    loss, n = chunked_softmax_xent(h, head, labels, chunk=chunk)
+    logits = (h @ head).astype(jnp.float32)
+    dense = jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0])
+    assert abs(float(loss) - float(dense)) < 1e-4
+    assert float(n) == b * s
+
+
+def test_chunked_xent_mask():
+    key = jax.random.PRNGKey(0)
+    b, s, d, v = 2, 8, 8, 20
+    h = jax.random.normal(key, (b, s, d))
+    head = jax.random.normal(key, (d, v)) * 0.3
+    labels = jax.random.randint(key, (b, s), 0, v)
+    mask = jnp.zeros((b, s)).at[:, :4].set(1.0)
+    loss_m, n = chunked_softmax_xent(h, head, labels, mask=mask, chunk=4)
+    loss_sub, n_sub = chunked_softmax_xent(h[:, :4], head, labels[:, :4],
+                                           chunk=4)
+    assert float(n) == 8 and float(n_sub) == 8
+    assert abs(float(loss_m) - float(loss_sub)) < 1e-5
+
+
+def test_chunked_xent_grad_finite():
+    key = jax.random.PRNGKey(1)
+    h = jax.random.normal(key, (2, 8, 16), jnp.bfloat16)
+    head = jax.random.normal(key, (16, 30), jnp.float32)
+    labels = jax.random.randint(key, (2, 8), 0, 30)
+
+    g = jax.grad(lambda hh: chunked_softmax_xent(
+        hh, head, labels, chunk=4)[0])(h)
+    assert np.all(np.isfinite(np.asarray(g, np.float32)))

@@ -1,0 +1,65 @@
+"""mlx5 uUAR-to-QP assignment policy vs the paper's Appendix B examples."""
+
+from repro.core.policy import MLX5Context, UUARClass
+from repro.core.resources import TDSharing
+
+
+def test_fig16_example():
+    """6 static uUARs, 2 low-latency; 7 QPs + 3 TDs (paper Fig. 16)."""
+    ctx = MLX5Context(total_uuars=6, num_low_lat=2)
+    qps = [ctx.create_qp() for _ in range(7)]
+    # QP0, QP1 -> low-latency uUARs (4, 5)
+    assert qps[0].uuar.index == 4 and qps[0].uuar.klass == UUARClass.LOW_LATENCY
+    assert qps[1].uuar.index == 5
+    # QP2-QP6 round-robin over medium uUARs 1,2,3
+    assert [q.uuar.index for q in qps[2:]] == [1, 2, 3, 1, 2]
+    # three TDs: TD0/TD1 share the first dynamic UAR page, TD2 a new one
+    tds = [ctx.create_td() for _ in range(3)]
+    td_qps = [ctx.create_qp(td=t) for t in tds]
+    pages = [q.uuar.uar_page for q in td_qps]
+    assert pages[0] == pages[1] and pages[2] == pages[0] + 1
+    assert td_qps[0].uuar.index != td_qps[1].uuar.index
+    assert all(q.qp_lock_disabled for q in td_qps)
+
+
+def test_static_16qp_assignment():
+    """Default CTX (16 uUARs, 4 low-lat): QP4 and QP15 share uUAR1
+    (the paper's '5th and 16th QP' observation)."""
+    ctx = MLX5Context()
+    qps = [ctx.create_qp() for _ in range(16)]
+    assert [q.uuar.index for q in qps[:4]] == [12, 13, 14, 15]
+    assert qps[4].uuar.index == qps[15].uuar.index == 1
+    assert ctx.uuars_used == 15
+
+
+def test_high_latency_overflow():
+    """All-but-one low latency: overflow QPs map to uUAR0 (atomic
+    doorbells, no lock)."""
+    ctx = MLX5Context(total_uuars=4, num_low_lat=3)
+    qps = [ctx.create_qp() for _ in range(5)]
+    assert [q.uuar.index for q in qps[:3]] == [1, 2, 3]
+    assert qps[3].uuar.index == 0 and qps[4].uuar.index == 0
+    assert qps[3].uuar.klass == UUARClass.HIGH_LATENCY
+    assert not qps[3].uuar.lock_required
+
+
+def test_td_sharing_modes():
+    # stock: even/odd pairs share a page
+    ctx = MLX5Context(td_sharing=TDSharing.SHARED_UAR)
+    tds = [ctx.create_td() for _ in range(4)]
+    pages = [next(u for u in ctx.uuars if u.td == t).uar_page for t in tds]
+    assert pages[0] == pages[1] and pages[2] == pages[3]
+    assert pages[0] != pages[2]
+    # proposed sharing=1: every TD gets its own page
+    ctx = MLX5Context(td_sharing=TDSharing.MAX_INDEPENDENT)
+    tds = [ctx.create_td() for _ in range(4)]
+    pages = [next(u for u in ctx.uuars if u.td == t).uar_page for t in tds]
+    assert len(set(pages)) == 4
+
+
+def test_dynamic_uuar_lock_disabled():
+    ctx = MLX5Context(td_sharing=TDSharing.MAX_INDEPENDENT)
+    td = ctx.create_td()
+    qp = ctx.create_qp(td=td)
+    assert qp.uuar.klass == UUARClass.DYNAMIC
+    assert not qp.uuar.lock_required

@@ -1,0 +1,63 @@
+"""Roofline analysis over dry-run records (synthetic record fixtures)."""
+
+from repro.launch.roofline import (PEAK_FLOPS, RooflineRow, active_params,
+                                   analyze_record, model_flops)
+from repro.configs import get_config
+
+
+def _rec(**kw):
+    base = {
+        "arch": "qwen2-0.5b", "shape": "train_4k", "mesh_name": "single",
+        "status": "ok", "n_chips": 256,
+        "mesh": {"data": 16, "model": 16}, "rules": "tp", "accum_steps": 1,
+        "cost": {"flops_per_device": 1e13, "bytes_per_device": 1e11},
+        "collectives": {"total_bytes": 5e9, "total_count": 100},
+        "memory": {"argument_bytes": 2 * 2**30, "temp_bytes": 8 * 2**30,
+                   "output_bytes": 2**30, "alias_bytes": 2**30},
+    }
+    base.update(kw)
+    return base
+
+
+def test_three_terms_and_bottleneck():
+    r = analyze_record(_rec())
+    assert abs(r.compute_s - 1e13 / PEAK_FLOPS) < 1e-9
+    assert r.memory_s > 0 and r.collective_s > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.useful_ratio
+    assert r.fits_hbm
+
+
+def test_oom_detected():
+    r = analyze_record(_rec(memory={"argument_bytes": 10 * 2**30,
+                                    "temp_bytes": 10 * 2**30,
+                                    "output_bytes": 0, "alias_bytes": 0}))
+    assert not r.fits_hbm
+
+
+def test_skipped_record():
+    r = analyze_record({"arch": "a", "shape": "long_500k",
+                        "mesh_name": "single", "status": "skipped",
+                        "reason": "designed skip"})
+    assert r.status == "skipped"
+    assert r.bottleneck == "-"
+
+
+def test_active_params_moe_smaller_than_total():
+    cfg = get_config("deepseek-moe-16b")
+    from repro.models.model import Model
+    total = Model(cfg).n_params()
+    active = active_params(cfg)
+    assert active < 0.3 * total          # 6/64 routed + shared + attn
+    dense = get_config("qwen2-0.5b")
+    assert abs(active_params(dense) - Model(dense).n_params()) < 1
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen2-0.5b")
+    t = model_flops(cfg, "train_4k", 256)
+    p = model_flops(cfg, "prefill_32k", 256)
+    d = model_flops(cfg, "decode_32k", 256)
+    assert t > p > d
+    n = active_params(cfg)
+    assert abs(t - 6 * n * 256 * 4096 / 256) / t < 1e-6

@@ -1,0 +1,78 @@
+"""Serving engine: batched == solo outputs, wave grouping, eos, budgets."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_batched_equals_solo(served):
+    cfg, params = served
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=6))
+    done = eng.run()
+    solo_eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    solo_eng.submit(Request(rid=9, prompt=prompt, max_new_tokens=6))
+    solo = solo_eng.run()[0]
+    for r in done:
+        assert r.output == solo.output
+
+
+def test_mixed_lengths_grouped_into_waves(served):
+    cfg, params = served
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                           max_new_tokens=4))
+    for i in range(3, 5):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 17, dtype=np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.output) == 4 for r in done)
+
+
+def test_eos_stops_early(served):
+    cfg, params = served
+    prompt = np.arange(1, 9, dtype=np.int32)
+    probe = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    probe.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    full = probe.run()[0].output
+    eos = full[3]        # force eos at the 4th generated token
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=64)
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8, eos_id=eos))
+    out = eng.run()[0].output
+    assert len(out) < len(full)
+    assert out == full[:len(out)]
+
+
+def test_max_len_budget(served):
+    cfg, params = served
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=16)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=100))
+    out = eng.run()[0].output
+    assert len(out) <= 16 - 8
+
+
+def test_greedy_deterministic(served):
+    cfg, params = served
+    prompt = np.arange(1, 9, dtype=np.int32)
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=64)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        outs.append(eng.run()[0].output)
+    assert outs[0] == outs[1]

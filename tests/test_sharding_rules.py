@@ -1,0 +1,88 @@
+"""Logical-axis sharding rules: divisibility fallback, batch specs, cache
+specs, layer planning (device-free — specs only)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.sharding import (RULE_PRESETS, batch_spec, kv_cache_spec,
+                                   spec_for, tp_rules)
+from repro.models.transformer import make_plan
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    spec = spec_for(tp_rules(), MESH, (896, 4864), ("embed", "mlp"))
+    assert spec == P(None, "model")
+
+
+def test_non_divisible_dims_replicate():
+    # 14 q heads do not divide 16 -> replicate the head dim
+    spec = spec_for(tp_rules(), MESH, (896, 14, 64),
+                    ("embed", "q_heads", "head_dim"))
+    assert spec == P()
+    # 64 heads divide -> shard
+    spec = spec_for(tp_rules(), MESH, (8192, 64, 128),
+                    ("embed", "q_heads", "head_dim"))
+    assert spec == P(None, "model")
+
+
+def test_mesh_axis_used_once():
+    rules = dict(tp_rules())
+    rules["embed"] = ("model",)
+    spec = spec_for(rules, MESH, (1024, 1024), ("embed", "mlp"))
+    # both want "model"; only the first dim gets it
+    assert spec == P("model")
+
+
+def test_fsdp_shards_embed_over_data():
+    rules = RULE_PRESETS["fsdp_tp"]()
+    spec = spec_for(rules, MESH, (8192, 64, 128),
+                    ("embed", "q_heads", "head_dim"))
+    assert spec == P("data", "model")
+
+
+def test_batch_spec_divisibility():
+    assert batch_spec(MESH, 256) == P("data")
+    assert batch_spec(MESH3, 256) == P(("pod", "data"))
+    assert batch_spec(MESH, 1) == P(None)      # batch 1 replicates
+
+
+def test_kv_cache_spec_fallbacks():
+    # kv heads divisible -> shard heads
+    assert kv_cache_spec(MESH, 128, 16, 64) == P("data", None, "model", None)
+    # kv heads not divisible, head_dim divisible -> shard head_dim
+    assert kv_cache_spec(MESH, 128, 8, 128) == P("data", None, None, "model")
+    # neither -> batch only
+    assert kv_cache_spec(MESH, 128, 5, 60) == P("data")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_layer_plans_cover_all_layers(arch):
+    cfg = get_config(arch)
+    plan = make_plan(cfg)
+    assert plan.n_layers == cfg.n_layers
+    # compile-size guard: the traced period stays small
+    assert len(plan.prefix) + len(plan.period) <= 9
+
+
+def test_recurrentgemma_plan_shape():
+    plan = make_plan(get_config("recurrentgemma-2b"))
+    assert len(plan.prefix) + len(plan.period) * plan.n_periods == 26
+    assert plan.n_periods >= 8
+
+
+def test_deepseek_dense_layer_in_prefix():
+    plan = make_plan(get_config("deepseek-moe-16b"))
+    assert plan.prefix[0].ffn == "dense0"
+    assert all(d.ffn == "moe" for d in plan.period)

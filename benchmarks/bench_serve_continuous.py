@@ -1,0 +1,99 @@
+"""Serving analogue of the paper's Fig. 2 extremes comparison: the same
+mixed-length request set through wave (static) scheduling and through
+continuous batching at each slot-pool sharing category (DESIGN.md §3).
+
+Rows report tokens/s with p50/p99 request latency, pool occupancy, and the
+matching endpoint model's relative hardware footprint, so both sides of
+the dedicated-vs-shared tradeoff appear in one table.  Engines are warmed
+(compile excluded) before the timed pass.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve_continuous \
+      [--arch smollm-360m] [--requests 12] [--slots 4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_smoke_config
+from repro.core.endpoints import Category
+from repro.models.model import Model
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.slots import SlotPool
+
+# dedicated slot / scalable middle / one shared wave (paper Section VI)
+CATEGORIES = (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
+              Category.STATIC, Category.MPI_THREADS)
+PROMPT_LENGTHS = (8, 16, 32)
+
+
+def make_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(
+                        1, cfg.vocab,
+                        int(rng.choice(PROMPT_LENGTHS))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(6, 14)))
+            for i in range(n)]
+
+
+def _drive(build, cfg, n_requests):
+    """Warm on the IDENTICAL request set so every jit shape (each prompt
+    length, every wave batch size) compiles before the timed pass."""
+    warm = build()
+    for r in make_requests(cfg, n_requests):
+        warm.submit(r)
+    warm.run()
+    eng = build()
+    for r in make_requests(cfg, n_requests):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = max(time.perf_counter() - t0, 1e-9)
+    total = sum(len(r.output) for r in done)
+    lat = sorted(eng.latency.values())
+    p50 = lat[int(0.50 * (len(lat) - 1))]
+    p99 = lat[int(0.99 * (len(lat) - 1))]
+    return eng, total, dt, p50, p99
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    cfg = get_smoke_config(args.arch)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+
+    _, total, dt, p50, p99 = _drive(
+        lambda: ServeEngine(cfg, params, n_slots=args.slots,
+                            max_len=args.max_len),
+        cfg, args.requests)
+    wave_tps = total / dt
+    row("serve_wave", 1e6 * dt / total,
+        f"{wave_tps:.1f}tok/s|p50={p50 * 1e3:.0f}ms|p99={p99 * 1e3:.0f}ms")
+
+    for cat in CATEGORIES:
+        eng, total, dt, p50, p99 = _drive(
+            lambda c=cat: ContinuousEngine(cfg, params, n_slots=args.slots,
+                                           max_len=args.max_len, category=c),
+            cfg, args.requests)
+        tps = total / dt
+        usage = SlotPool(cat, args.slots).endpoint_usage()
+        row(f"serve_continuous_{cat.value}", 1e6 * dt / total,
+            f"{tps:.1f}tok/s|p50={p50 * 1e3:.0f}ms|p99={p99 * 1e3:.0f}ms"
+            f"|group={eng.pool.group_size}|occ={eng.occupancy:.2f}"
+            f"|vs_wave={tps / wave_tps:.2f}x"
+            f"|uuar_footprint={usage['uuars'] * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ BENCHES = [
     "bench_fig12_global_array",
     "bench_fig14_stencil",
     "bench_endpoint_collectives",
+    "bench_serve_continuous",
     "roofline",
 ]
 

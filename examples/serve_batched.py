@@ -1,5 +1,6 @@
-"""End-to-end serving driver: batched requests through the wave engine
-(deliverable (b)): mixed prompt lengths, eos stopping, throughput report.
+"""End-to-end serving driver: the same mixed-length request set through the
+wave engine and through continuous batching at each slot-pool category, so
+the endpoint-category tradeoff (DESIGN.md §3) is visible from one command:
 
   PYTHONPATH=src python examples/serve_batched.py [--arch qwen2-0.5b]
 """
@@ -11,8 +12,30 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_smoke_config
+from repro.core.endpoints import Category
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+
+
+def make_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, ln in enumerate(rng.choice([8, 16, 32], size=n)):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab, ln).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 12)),
+            eos_id=int(rng.integers(0, cfg.vocab)) if i % 3 == 0 else None))
+    return reqs
+
+
+def drive(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total = sum(len(r.output) for r in done)
+    return done, total, dt
 
 
 def main():
@@ -26,22 +49,25 @@ def main():
     cfg = get_smoke_config(args.arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, n_slots=args.slots, max_len=160)
 
-    rng = np.random.default_rng(0)
-    lengths = rng.choice([8, 16, 32], size=args.requests)
-    for i, ln in enumerate(lengths):
-        engine.submit(Request(
-            rid=i, prompt=rng.integers(1, cfg.vocab, ln).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 12)),
-            eos_id=int(rng.integers(0, cfg.vocab)) if i % 3 == 0 else None))
+    done, total, dt = drive(ServeEngine(cfg, params, n_slots=args.slots,
+                                        max_len=160),
+                            make_requests(cfg, args.requests))
+    print(f"wave           : {len(done)} requests / {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots)")
+    baseline = {r.rid: r.output for r in done}
 
-    t0 = time.time()
-    done = engine.run()
-    dt = time.time() - t0
-    total = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, {args.slots} slots)")
+    for cat in (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
+                Category.MPI_THREADS):
+        eng = ContinuousEngine(cfg, params, n_slots=args.slots,
+                               max_len=160, category=cat)
+        done, total, dt = drive(eng, make_requests(cfg, args.requests))
+        agree = sum(baseline[r.rid] == r.output for r in done)
+        print(f"{cat.value:15s}: {len(done)} requests / {total} tokens "
+              f"in {dt:.2f}s ({total / dt:.1f} tok/s, "
+              f"group {eng.pool.group_size}, occupancy "
+              f"{eng.occupancy:.2f}, {agree}/{len(done)} match wave)")
+
     for r in sorted(done, key=lambda r: r.rid)[:6]:
         print(f"  req {r.rid:2d} prompt={len(r.prompt):2d}tok -> "
               f"{len(r.output)} new: {r.output[:8]}")

@@ -5,7 +5,10 @@ kernel of its own); these kernels cover the perf-critical compute the
 assigned architectures need at the dry-run shapes (DESIGN.md §5):
 
   flash_attention/  fused streaming-softmax GQA attention (causal + local
-                    window), BlockSpec-tiled for VMEM
+                    window), BlockSpec-tiled for VMEM; plus the ragged
+                    decode kernel (per-slot cache lengths via scalar
+                    prefetch) — the TPU-target twin of the vector-index
+                    ``attention_decode`` path continuous batching runs
   rglru/            RG-LRU gated linear recurrence, block-parallel scan
 
 Each ships as kernel.py (pl.pallas_call + BlockSpec; TPU is the TARGET),

@@ -1,3 +1,4 @@
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_decode_attention)
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "flash_decode_attention"]

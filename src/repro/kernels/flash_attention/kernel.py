@@ -22,6 +22,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                   causal: bool, window: int, softcap: float, scale: float,
@@ -80,6 +84,99 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _ragged_decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref,
+                          acc_ref, m_ref, l_ref, *, kv_block: int, nk: int,
+                          softcap: float, scale: float, hkv: int):
+    h = pl.program_id(0)                 # b * Hkv + kv head
+    kj = pl.program_id(1)
+    cur = idx_ref[h // hkv]              # this row's last valid kv position
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # kv blocks entirely past the slot's length are skipped — the ragged
+    # analogue of the causal block skip above
+    @pl.when(kj * kv_block <= cur)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale           # (g, dh)
+        k = k_ref[0].astype(jnp.float32)                   # (kb, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        g = q_ref.shape[1]
+        k_pos = kj * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (g, kv_block), 1)
+        s = jnp.where(k_pos <= cur, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def ragged_decode_bhsd(q, k, v, cur_index, *, softcap: float = 0.0,
+                       kv_block: int = 256, interpret: bool = False):
+    """Single-position decode attention over ragged per-slot cache lengths.
+
+    q: (B*Hkv, G, dh) — the G query heads of one kv head packed as MXU rows
+    (GQA, heads-major); k/v: (B*Hkv, Smax, dh) shared caches; cur_index:
+    (B,) int32 — batch row b attends to positions [0, cur_index[b]], its
+    slot's occupied prefix of the cache.  The per-row length rides in as a
+    scalar-prefetch operand (SMEM) so whole kv blocks past a slot's length
+    are skipped, giving each slot decode cost proportional to ITS length,
+    not the pool-wide max — the continuous-batching analogue of the causal
+    block skip.  -> (B*Hkv, G, dh)."""
+    bhkv, g, dh = q.shape
+    smax = k.shape[1]
+    b = cur_index.shape[0]
+    assert bhkv % b == 0, (bhkv, b)
+    hkv = bhkv // b
+    kv_block = min(kv_block, smax)
+    assert smax % kv_block == 0, (smax, kv_block)
+    nk = smax // kv_block
+    kernel = functools.partial(
+        _ragged_decode_kernel, kv_block=kv_block, nk=nk, softcap=softcap,
+        scale=dh ** -0.5, hkv=hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda h, kj, idx: (h, 0, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda h, kj, idx: (h, kj, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda h, kj, idx: (h, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda h, kj, idx: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhkv, g, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cur_index.astype(jnp.int32), q, k, v)
+
+
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          softcap: float = 0.0, q_block: int = 512,
                          kv_block: int = 1024, interpret: bool = False):
@@ -118,7 +215,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((q_block,), jnp.float32),
             pltpu.VMEM((q_block,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

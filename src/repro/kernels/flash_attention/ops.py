@@ -7,7 +7,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.kernel import (flash_attention_bhsd,
+                                                  ragged_decode_bhsd)
 
 
 def _on_tpu() -> bool:
@@ -36,3 +37,29 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                softcap=softcap, q_block=q_block,
                                kv_block=kv_block, interpret=interpret)
     return out.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("softcap", "kv_block", "interpret"))
+def flash_decode_attention(q, k_cache, v_cache, cur_index, *,
+                           softcap: float = 0.0, kv_block: int = 256,
+                           interpret: bool = None):
+    """Ragged-length decode attention (continuous batching / slot pools).
+
+    q: (B, 1, Hq, dh); k_cache/v_cache: (B, Smax, Hkv, dh); cur_index:
+    (B,) int32 — row b attends to cache positions [0, cur_index[b]]
+    (``models.attention.attention_decode`` with a vector index is the
+    oracle).  -> (B, 1, Hq, dh)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    # (B, 1, Hq, dh) -> kv-head-major (B*Hkv, G, dh): the G query heads of
+    # one kv head become the MXU rows of one program instance
+    qh = q.reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
+    kh = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, -1, dh)
+    vh = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, -1, dh)
+    out = ragged_decode_bhsd(qh, kh, vh, jnp.asarray(cur_index, jnp.int32),
+                             softcap=softcap, kv_block=kv_block,
+                             interpret=interpret)
+    return out.reshape(b, 1, hq, dh)

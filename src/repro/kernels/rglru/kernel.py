@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _rglru_kernel(a_ref, x_ref, o_ref, h_ref, *, t_block: int):
     tj = pl.program_id(2)
@@ -61,7 +65,7 @@ def rglru_scan_btc(a, x, *, t_block: int = 256, c_block: int = 128,
                                lambda bi, ci, tj: (bi, tj, ci)),
         out_shape=jax.ShapeDtypeStruct((b, t, c), x.dtype),
         scratch_shapes=[pltpu.VMEM((c_block,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, x)

@@ -1,7 +1,11 @@
-"""Serving launcher: batched greedy decoding with the wave engine.
+"""Serving launcher: batched greedy decoding, wave or continuous engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 8 --prompt-len 16 --max-new 12
+
+  # continuous batching with a dedicated slot per request:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --engine continuous --category mpi_everywhere --mixed-lengths
 """
 
 from __future__ import annotations
@@ -13,16 +17,24 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core.endpoints import Category
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCHS))
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default="wave",
+                    choices=("wave", "continuous"))
+    ap.add_argument("--category", default="mpi_everywhere",
+                    choices=[c.value for c in Category],
+                    help="slot-pool sharing category (continuous engine)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw prompt lengths from {1/2, 1, 2}x prompt-len")
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
@@ -32,21 +44,36 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, n_slots=args.slots,
-                         max_len=args.max_len)
+    if args.engine == "continuous":
+        engine = ContinuousEngine(cfg, params, n_slots=args.slots,
+                                  max_len=args.max_len,
+                                  category=Category(args.category))
+    else:
+        engine = ServeEngine(cfg, params, n_slots=args.slots,
+                             max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
+        plen = args.prompt_len
+        if args.mixed_lengths:
+            plen = int(rng.choice([max(1, plen // 2), plen, 2 * plen]))
         engine.submit(Request(
             rid=i,
-            prompt=rng.integers(1, cfg.vocab,
-                                size=args.prompt_len).astype(np.int32),
+            prompt=rng.integers(1, cfg.vocab, size=plen).astype(np.int32),
             max_new_tokens=args.max_new))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done)
+    lat = sorted(engine.latency.values())
+    p50 = lat[len(lat) // 2] if lat else 0.0
     print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s)")
+          f"({n_tok / dt:.1f} tok/s, engine={args.engine}, "
+          f"p50 latency {p50:.2f}s)")
+    if args.engine == "continuous":
+        print(f"slot pool: {engine.pool.category.value} "
+              f"(group size {engine.pool.group_size}), "
+              f"occupancy {engine.occupancy:.2f}, "
+              f"{engine.stats['decode_steps']} decode steps")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.output}")
 

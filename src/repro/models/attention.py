@@ -184,7 +184,9 @@ def attention_decode(q, k_cache, v_cache, cur_index, *, window: int = 0,
                      softcap: float = 0.0, valid_mask=None):
     """Single-token decode vs a cache.  q: (B,1,Hq,dh);
     k_cache/v_cache: (B,Smax,Hkv,dh); cur_index: scalar int32 — the position
-    being written (attends to [0, cur_index]).  ``valid_mask`` (Smax,)
+    being written (attends to [0, cur_index]) — or (B,) int32 for per-slot
+    positions (continuous batching: each batch row decodes at its own
+    offset into a ragged shared cache).  ``valid_mask`` (Smax,) or (B,Smax)
     overrides the index-derived mask (rolling-window caches)."""
     b, _, hq, dh = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -194,12 +196,20 @@ def attention_decode(q, k_cache, v_cache, cur_index, *, window: int = 0,
     s = _softcap(s * dh ** -0.5, softcap)
     if valid_mask is None:
         k_pos = jnp.arange(smax)
-        valid = k_pos <= cur_index
-        if window > 0:
-            valid &= k_pos > cur_index - window
+        idx = jnp.asarray(cur_index)
+        if idx.ndim == 1:               # per-slot ragged lengths
+            valid = k_pos[None, :] <= idx[:, None]          # (B, Smax)
+            if window > 0:
+                valid &= k_pos[None, :] > idx[:, None] - window
+        else:
+            valid = k_pos <= idx
+            if window > 0:
+                valid &= k_pos > idx - window
     else:
         valid = valid_mask
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    vb = valid[:, None, None, :] if valid.ndim == 2 \
+        else valid[None, None, None, :]
+    s = jnp.where(vb, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, hq, dh).astype(q.dtype)

@@ -157,12 +157,16 @@ class Model:
 
     # ----- serving -------------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int,
-                   enc_len: int = 0):
+                   enc_len: int = 0, per_slot: bool = False):
+        """``per_slot`` makes ``idx`` a (B,) vector so every batch row
+        decodes at its own position (continuous batching — ragged slot
+        lengths in one shared cache)."""
         cfg = self.cfg
         stack = init_stack_cache(
             cfg, self.plan, batch_size, max_len, enc_len=enc_len,
             window_cache=(cfg.attn_window > 0 and cfg.sub_quadratic))
-        return {"stack": stack, "idx": jnp.zeros((), jnp.int32)}
+        idx = jnp.zeros((batch_size,) if per_slot else (), jnp.int32)
+        return {"stack": stack, "idx": idx}
 
     def prefill(self, params, batch, cache, shard_fn=lambda a, *n: a,
                 skip_future: bool = True):
@@ -181,7 +185,11 @@ class Model:
     def decode_step(self, params, cache, tokens=None, embeds=None,
                     shard_fn=lambda a, *n: a):
         """One decode step.  tokens: (B,) i32 (or embeds (B,d)).
-        -> (logits (B,V) fp32, new_cache)."""
+        -> (logits (B,V) fp32, new_cache).
+
+        With a ``per_slot`` cache (``idx`` is (B,)), each row decodes at
+        its own position: RoPE, the cache write, and the attention mask
+        all follow ``idx[b]`` (continuous batching)."""
         cfg = self.cfg
         idx = cache["idx"]
         if tokens is not None:
@@ -190,7 +198,10 @@ class Model:
         else:
             batch = {"embeds": embeds[:, None, :]}
             b = embeds.shape[0]
-        pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+        if jnp.ndim(idx) == 1:          # per-slot positions
+            pos = idx[:, None].astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
         if cfg.pos == "mrope":
             pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
         batch["positions"] = pos

@@ -147,6 +147,17 @@ class BlockCtx:
 
 
 def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool):
+    idx = jnp.asarray(idx)
+    if idx.ndim == 1:
+        # per-slot write positions (continuous batching): batch row b lands
+        # at idx[b]; rows whose index ran past the buffer end write nowhere
+        # (retired slots decoding into the masked void)
+        slot = idx % window if (rolling and window > 0) else idx
+        smax = cache["k"].shape[1]
+        hit = jnp.arange(smax)[None, :] == slot[:, None]     # (B, Smax)
+        k = jnp.where(hit[..., None, None], k_new, cache["k"])
+        v = jnp.where(hit[..., None, None], v_new, cache["v"])
+        return {"k": k, "v": v}
     if rolling and window > 0:
         slot = idx % window
     else:
@@ -187,8 +198,12 @@ def _self_attention(p, h, ctx: BlockCtx, window: int, cache):
             # every live slot holds one of the last `window` positions; only
             # not-yet-written slots (buffer not full) are invalid
             smax = cache["k"].shape[1]
-            valid = (jnp.arange(smax) <= ctx.decode_idx) | (
-                ctx.decode_idx >= smax)
+            idx = jnp.asarray(ctx.decode_idx)
+            j = jnp.arange(smax)
+            if idx.ndim == 1:           # per-slot ragged positions
+                valid = (j[None, :] <= idx[:, None]) | (idx[:, None] >= smax)
+            else:
+                valid = (j <= idx) | (idx >= smax)
             out = attention_decode(q, new_kv["k"], new_kv["v"],
                                    ctx.decode_idx, valid_mask=valid,
                                    softcap=cfg.attn_logit_softcap)

@@ -1,3 +1,4 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.slots import SlotPool
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["ContinuousEngine", "Request", "ServeEngine", "SlotPool"]

@@ -1,29 +1,39 @@
-"""Batched serving engine (wave scheduling).
+"""Serving engines: static wave batching and continuous batching.
 
-Requests are grouped into waves of equal prompt length (padding-free);
-each wave prefills BATCHED into a shared KV cache and decodes greedily
-until every member finishes (finished slots keep decoding into a masked
-void, their outputs dropped — the standard static-batching tradeoff).
+``ServeEngine`` is the legacy wave scheduler (DESIGN.md §6.1): requests
+are grouped into waves of equal prompt length, each wave prefills batched
+into a shared KV cache and decodes until every member finishes — finished
+slots keep decoding into a masked void, the standard static-batching
+tradeoff, and nothing is admitted mid-wave.
 
-The decode step is the same jitted ``Model.decode_step`` the dry-run
-lowers, so serving exercises exactly the production path.  Per-slot
-position tracking (true continuous batching / paged KV) is the documented
-extension point — it requires per-sequence cache offsets, i.e. a paged
-attention kernel (DESIGN.md §5 notes).
+``ContinuousEngine`` (DESIGN.md §6.2) is the paper's resource-pool idea
+applied to decode slots: per-slot sequence positions (``Model.init_cache``
+``per_slot`` + position-aware ``decode_step``), ragged slot lengths in one
+shared cache, and slot admission/eviction so a finished request frees its
+slot for a queued request mid-decode.  The admission policy is a
+``SlotPool`` keyed by ``core.endpoints.Category`` (DESIGN.md §3): a
+dedicated slot per request is MPI-everywhere, one shared wave is
+MPI+threads, and k-way-shared slot groups are the scalable middle.
+
+Both engines drive the same jitted ``Model.decode_step`` the dry-run
+lowers, so serving exercises exactly the production path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict, deque
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.endpoints import Category
 from repro.models.model import Model
+from repro.serve.slots import SlotPool
 
 
 @dataclasses.dataclass
@@ -36,6 +46,8 @@ class Request:
 
 
 class ServeEngine:
+    """Static wave batching (the MPI+threads extreme of the slot pools)."""
+
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 512):
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
@@ -47,6 +59,8 @@ class ServeEngine:
         self.max_len = max_len
         self.queue: deque = deque()
         self.done: List[Request] = []
+        self.latency: Dict[int, float] = {}      # rid -> s from run() start
+        self._t0 = 0.0
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, tokens=t))
         self._prefill = jax.jit(
@@ -66,8 +80,8 @@ class ServeEngine:
         # largest group first (throughput)
         length = max(by_len, key=lambda l: len(by_len[l]))
         wave = by_len[length][: self.n_slots]
-        for r in wave:
-            self.queue.remove(r)
+        taken = {id(r) for r in wave}
+        self.queue = deque(r for r in self.queue if id(r) not in taken)
         return wave
 
     def _run_wave(self, wave: List[Request]):
@@ -100,12 +114,158 @@ class ServeEngine:
         for i, r in enumerate(wave):
             if alive[i]:          # wave budget exhausted
                 r.output.append(int(next_tok[i]))
+        now = time.perf_counter() - self._t0
+        for r in wave:
+            self.latency[r.rid] = now
         self.done.extend(wave)
 
     def run(self) -> List[Request]:
+        self._t0 = time.perf_counter()
         while self.queue:
             wave = self._next_wave()
             if not wave:
                 break
             self._run_wave(wave)
         return self.done
+
+
+def _scatter_slot(full, one, slot):
+    """Insert the batch-1 cache ``one`` as batch row ``slot`` of ``full``
+    and pin that slot's position to the prompt length.  Prefix block
+    caches carry batch at axis 0; scanned body caches at axis 1 (behind
+    the leading n_periods axis)."""
+    def upd(axis):
+        return lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+            dst, src, slot, axis=axis)
+
+    stack = {
+        "prefix": [jax.tree.map(upd(0), f, o)
+                   for f, o in zip(full["stack"]["prefix"],
+                                   one["stack"]["prefix"])],
+        "body": [jax.tree.map(upd(1), f, o)
+                 for f, o in zip(full["stack"]["body"],
+                                 one["stack"]["body"])],
+    }
+    return {"stack": stack, "idx": full["idx"].at[slot].set(one["idx"])}
+
+
+class ContinuousEngine:
+    """Continuous batching over an endpoint-style slot pool.
+
+    One persistent ``n_slots``-row cache holds every active request at its
+    own ragged length; a finished request immediately frees its slot and
+    the ``SlotPool`` decides when a queued request may take it (group
+    fully drained — group size 1 admits instantly).  Prompt lengths need
+    not match across slots, so no wave grouping and no padding.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 512,
+                 category: Category = Category.MPI_EVERYWHERE,
+                 pool: Optional[SlotPool] = None):
+        assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
+            "the continuous engine serves decoder-only token models"
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.pool = pool or SlotPool(category, n_slots)
+        assert self.pool.n_slots == n_slots
+        self.queue: deque = deque()
+        self.done: List[Request] = []
+        self.latency: Dict[int, float] = {}      # rid -> s from run() start
+        # decode_steps: jitted step calls; busy_slot_steps / slot_steps is
+        # the pool's occupancy (1.0 = every slot useful every step)
+        self.stats = {"decode_steps": 0, "slot_steps": 0,
+                      "busy_slot_steps": 0, "prefills": 0}
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, tokens=t))
+        self._prefill = jax.jit(
+            lambda p, b, c: self.model.prefill(p, b, c))
+        self._merge = jax.jit(_scatter_slot)
+        self._t0 = 0.0
+        self._slot_req: List[Optional[Request]] = []
+        self._next_tok = None
+        self._remaining = None
+        self._pos = None
+
+    def submit(self, req: Request):
+        req.output = []
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit max_len="
+                f"{self.max_len}")
+        self.queue.append(req)
+
+    # ----- slot lifecycle -------------------------------------------------
+    def _admit(self, cache, slot: int, req: Request):
+        """Prefill ``req`` alone and scatter its cache into ``slot``."""
+        prompt = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
+        one = self.model.init_cache(1, self.max_len)
+        logits, one = self._prefill(self.params, {"tokens": prompt}, one)
+        cache = self._merge(cache, one, jnp.asarray(slot, jnp.int32))
+        self._slot_req[slot] = req
+        self._next_tok[slot] = int(jnp.argmax(logits, -1)[0])
+        self._remaining[slot] = req.max_new_tokens
+        self._pos[slot] = len(req.prompt)
+        self.stats["prefills"] += 1
+        return cache
+
+    def _retire(self, slot: int):
+        req = self._slot_req[slot]
+        self.latency[req.rid] = time.perf_counter() - self._t0
+        self.done.append(req)
+        self._slot_req[slot] = None
+
+    # ----- main loop ------------------------------------------------------
+    def run(self) -> List[Request]:
+        self._t0 = time.perf_counter()
+        b = self.n_slots
+        cache = self.model.init_cache(b, self.max_len, per_slot=True)
+        self._slot_req = [None] * b
+        self._next_tok = np.zeros(b, np.int32)
+        self._remaining = np.zeros(b, np.int64)
+        self._pos = np.zeros(b, np.int64)
+
+        while self.queue or any(r is not None for r in self._slot_req):
+            if self.queue:
+                occupied = [r is not None for r in self._slot_req]
+                for slot in self.pool.admissible(occupied):
+                    if not self.queue:
+                        break
+                    cache = self._admit(cache, slot, self.queue.popleft())
+            active = [i for i, r in enumerate(self._slot_req)
+                      if r is not None]
+            if not active:       # queue drained mid-check
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(self._next_tok))
+            self.stats["decode_steps"] += 1
+            self.stats["slot_steps"] += b
+            self.stats["busy_slot_steps"] += len(active)
+            produced = self._next_tok.copy()
+            # np.array (copy): admission writes the prefill token in-place
+            nxt = np.array(jnp.argmax(logits, -1), np.int32)
+            self._pos += 1       # every row's cache index advanced
+            for i in active:
+                r = self._slot_req[i]
+                r.output.append(int(produced[i]))
+                self._remaining[i] -= 1
+                finished = (self._remaining[i] <= 0
+                            or (r.eos_id is not None
+                                and int(nxt[i]) == r.eos_id))
+                if not finished and self._pos[i] >= self.max_len - 1:
+                    r.output.append(int(nxt[i]))   # budget exhausted
+                    finished = True
+                if finished:
+                    self._retire(i)
+            self._next_tok = nxt
+        return self.done
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slot-steps that decoded a live request."""
+        if not self.stats["slot_steps"]:
+            return 0.0
+        return self.stats["busy_slot_steps"] / self.stats["slot_steps"]

@@ -1,0 +1,70 @@
+"""Slot pools: the paper's endpoint categories applied to KV-cache slots.
+
+The serving translation of Section VI (DESIGN.md §3): a decode slot is the
+communication-resource analogue — a dedicated slot per request is MPI
+everywhere (level-1 sharing: peak throughput, peak footprint), one shared
+wave is MPI+threads (level-4: all requests serialized behind one refill
+barrier), and k-way-shared slot groups are the scalable middle that
+recovers dedicated-level throughput at a fraction of the scheduling
+freedom.  ``Category.level`` (Fig. 4b) drives the group size, so the
+serving pool and the endpoint model stay one abstraction.
+
+A group admits new requests only when EVERY slot in it has drained — the
+slot-pool analogue of threads contending on a shared uUAR: the wider the
+sharing, the longer a finished request's slot idles behind its
+neighbours' stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+from repro.core.endpoints import Category, EndpointModel
+
+
+def group_size_for(category: Category, n_slots: int) -> int:
+    """Sharing level (Fig. 4b) -> admission group size.
+
+    level 1 (dedicated paths)      -> 1 slot/group: continuous batching
+    level 2 (pairs share a UAR)    -> 2 slots/group
+    level 3 (static uUAR sharing)  -> 4 slots/group (the 4 static uUARs)
+    level 4 (one shared QP)        -> all slots: static wave batching
+    """
+    return {1: 1, 2: 2, 3: 4, 4: n_slots}[category.level]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotPool:
+    """Admission policy over ``n_slots`` decode slots for a category."""
+
+    category: Category
+    n_slots: int
+
+    @property
+    def group_size(self) -> int:
+        return min(group_size_for(self.category, self.n_slots),
+                   self.n_slots)
+
+    @property
+    def groups(self) -> List[range]:
+        g = self.group_size
+        return [range(lo, min(lo + g, self.n_slots))
+                for lo in range(0, self.n_slots, g)]
+
+    def admissible(self, occupied: Sequence[bool]) -> List[int]:
+        """Slots that may admit a queued request now: free slots whose
+        whole group has drained (for group_size 1 that is simply every
+        free slot — true continuous batching)."""
+        out: List[int] = []
+        for grp in self.groups:
+            if not any(occupied[i] for i in grp):
+                out.extend(grp)
+        return out
+
+    def endpoint_usage(self) -> dict:
+        """Relative hardware footprint of the matching endpoint model
+        (Table 1 numbers) — reported next to throughput so the bench shows
+        both sides of the paper's tradeoff."""
+        return EndpointModel.build(
+            self.category, self.n_slots).relative_usage()

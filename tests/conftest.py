@@ -4,8 +4,21 @@ import sys
 # src layout without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))   # for _hypothesis_stub
 
 # NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — the
 # smoke tests and benches must see the real single device.  Tests that need
 # many devices (sharding/collective tests) spawn subprocesses that set
 # XLA_FLAGS before importing jax.
+
+# Optional-dep fallback: six test modules import hypothesis at module scope
+# (requirements-dev.txt pins the real package).  On a bare interpreter,
+# install the deterministic stub so the suite still collects and the
+# property tests replay a fixed sample instead of erroring at collection.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

@@ -6,8 +6,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_decode_attention)
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.attention import attention_decode
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
 
@@ -68,6 +70,48 @@ def test_flash_block_shape_invariance(seed, qb, kb):
     """Output must not depend on the BlockSpec tiling."""
     _fa_case(1, 128, 128, 2, 2, 16, jnp.float32, True, 0, 0.0,
              qb=qb, kb=kb, seed=seed)
+
+
+# ---------------- ragged decode kernel ----------------
+
+def _ragged_case(b, smax, hq, hkv, dh, kb, softcap=0.0, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, smax, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, smax, hkv, dh), jnp.float32)
+    idx = jax.random.randint(ks[3], (b,), 0, smax)
+    out = flash_decode_attention(q, k, v, idx, softcap=softcap,
+                                 kv_block=kb, interpret=True)
+    ref = attention_decode(q, k, v, idx, softcap=softcap)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+    assert err < 3e-5, err
+
+
+@pytest.mark.parametrize("b,smax,hq,hkv,dh,kb", [
+    (3, 128, 4, 2, 16, 32), (2, 256, 6, 2, 32, 64), (4, 64, 5, 1, 16, 64),
+    (1, 128, 8, 8, 8, 128),
+])
+def test_ragged_decode_shapes(b, smax, hq, hkv, dh, kb):
+    """Per-slot cache lengths (continuous batching) vs the model-side
+    vector-index attention_decode oracle."""
+    _ragged_case(b, smax, hq, hkv, dh, kb)
+
+
+def test_ragged_decode_softcap():
+    _ragged_case(2, 128, 4, 2, 16, 32, softcap=10.0)
+
+
+def test_ragged_decode_block_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 16), jnp.float32)
+    idx = jnp.asarray([5, 100], jnp.int32)
+    outs = [np.asarray(flash_decode_attention(q, k, v, idx, kv_block=kb,
+                                              interpret=True))
+            for kb in (32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
 
 
 # ---------------- RG-LRU kernel ----------------

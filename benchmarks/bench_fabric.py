@@ -1,0 +1,109 @@
+"""Fleet-level category sweep: the paper's endpoint tradeoff applied to a
+worker fleet behind the fabric router (DESIGN.md §9).
+
+Sweeps dispatch category x worker count x traffic shape on the virtual-
+time fleet (SimWorker: pure scheduling, no model — the whole sweep is
+host-milliseconds) and reports tokens/s, p50/p99 request latency, pool
+occupancy, dispatch fairness, queue-lock wait, and the fleet's aggregate
+endpoint footprint relative to dedicated-per-worker.
+
+The acceptance row (`fabric_acceptance`) pins the headline claim on the
+canonical deterministic bursty trace with 8 workers: every k-way-shared
+dispatch category keeps >= 0.9x the throughput of dedicated-per-worker
+queues at <= half the aggregate endpoint footprint.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_fabric
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import row, write_bench_json
+from repro.core.endpoints import Category
+from repro.serve.fabric import (TRAFFIC_SHAPES, build_sim_fleet,
+                                canonical_bursty_trace)
+
+# dedicated / k-way-shared middle / one shared funnel (paper Section VI)
+CATEGORIES = (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
+              Category.STATIC, Category.MPI_THREADS)
+WORKER_COUNTS = (2, 4, 8)
+TRAFFICS = ("poisson", "bursty", "session")
+
+
+def run_one(category: Category, n_workers: int, trace, *,
+            placement: str = "round_robin", n_slots: int = 4):
+    router = build_sim_fleet(n_workers, category, n_slots=n_slots,
+                             placement=placement)
+    rep = router.run(trace)
+    assert rep.n_completed == rep.n_arrivals, \
+        (category, n_workers, rep.n_completed, rep.n_arrivals)
+    return rep
+
+
+def metrics_of(rep) -> dict:
+    return {
+        "tok_per_s": rep.tok_per_s,
+        "p50_ms": rep.latency_percentile(0.5) / 1e6,
+        "p99_ms": rep.latency_percentile(0.99) / 1e6,
+        "occupancy": rep.occupancy,
+        "fairness": rep.fairness,
+        "lock_wait_ns": rep.lock_wait_ns,
+        "uuar_footprint": rep.endpoint_usage["uuars"],
+        "memory_footprint": rep.endpoint_usage["memory"],
+        "completed": rep.n_completed,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--placement", default="round_robin")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    rows = []
+    for traffic in TRAFFICS:
+        trace = TRAFFIC_SHAPES[traffic](args.requests, seed=3)
+        for n_workers in WORKER_COUNTS:
+            for cat in CATEGORIES:
+                rep = run_one(cat, n_workers, trace,
+                              placement=args.placement)
+                m = metrics_of(rep)
+                rows.append({"config": {
+                    "category": cat.value, "workers": n_workers,
+                    "traffic": traffic, "placement": args.placement,
+                    "requests": args.requests}, "metrics": m})
+                row(f"fabric_{traffic}_{n_workers}w_{cat.value}",
+                    1e3 / max(m["tok_per_s"], 1e-9) * 1e6,
+                    f"{m['tok_per_s']:.0f}tok/s"
+                    f"|p50={m['p50_ms']:.2f}ms|p99={m['p99_ms']:.2f}ms"
+                    f"|occ={m['occupancy']:.2f}|fair={m['fairness']:.2f}"
+                    f"|uuar={m['uuar_footprint'] * 100:.1f}%")
+
+    # acceptance row: canonical bursty trace, 8 workers
+    trace = canonical_bursty_trace()
+    base = run_one(Category.MPI_EVERYWHERE, 8, trace,
+                   placement=args.placement)
+    for cat in (Category.SHARED_DYNAMIC, Category.STATIC,
+                Category.MPI_THREADS):
+        rep = run_one(cat, 8, trace, placement=args.placement)
+        ratio = rep.tok_per_s / base.tok_per_s
+        foot = rep.endpoint_usage["uuars"]
+        ok = ratio >= 0.9 and foot <= 0.5
+        rows.append({"config": {
+            "category": cat.value, "workers": 8,
+            "traffic": "canonical_bursty", "placement": args.placement},
+            "metrics": {**metrics_of(rep), "vs_dedicated": ratio,
+                        "acceptance": ok}})
+        row(f"fabric_acceptance_{cat.value}",
+            1e3 / max(rep.tok_per_s, 1e-9) * 1e6,
+            f"vs_dedicated={ratio:.3f}x|uuar={foot * 100:.1f}%"
+            f"|acceptance={'PASS' if ok else 'FAIL'}")
+        assert ok, (cat, ratio, foot)
+
+    write_bench_json("fabric", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

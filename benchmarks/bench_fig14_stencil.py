@@ -10,7 +10,7 @@ comes from the calibrated ibsim with the hybrid endpoint layout
 import jax
 import jax.numpy as jnp
 
-from repro.core import Category, paper_categories
+from repro.core import paper_categories
 from repro.core.endpoints import build_hybrid
 from repro.core.ibsim.benchmark import message_rate
 from repro.core.ibsim.costmodel import CONSERVATIVE

@@ -19,7 +19,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench_json
 from repro.configs import get_smoke_config
 from repro.core.endpoints import Category
 from repro.models.model import Model
@@ -68,10 +68,14 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--out", default=None)
     args = ap.parse_args([] if __name__ != "__main__" else None)
 
     cfg = get_smoke_config(args.arch)
     params = Model(cfg).init(jax.random.PRNGKey(0))
+    base_config = {"arch": args.arch, "requests": args.requests,
+                   "slots": args.slots, "max_len": args.max_len}
+    rows = []
 
     _, total, dt, p50, p99 = _drive(
         lambda: ServeEngine(cfg, params, n_slots=args.slots,
@@ -80,6 +84,9 @@ def main():
     wave_tps = total / dt
     row("serve_wave", 1e6 * dt / total,
         f"{wave_tps:.1f}tok/s|p50={p50 * 1e3:.0f}ms|p99={p99 * 1e3:.0f}ms")
+    rows.append({"config": {**base_config, "engine": "wave"},
+                 "metrics": {"tok_per_s": wave_tps, "p50_s": p50,
+                             "p99_s": p99, "tokens": total}})
 
     for cat in CATEGORIES:
         eng, total, dt, p50, p99 = _drive(
@@ -93,6 +100,16 @@ def main():
             f"|group={eng.pool.group_size}|occ={eng.occupancy:.2f}"
             f"|vs_wave={tps / wave_tps:.2f}x"
             f"|uuar_footprint={usage['uuars'] * 100:.1f}%")
+        rows.append({"config": {**base_config, "engine": "continuous",
+                                "category": cat.value},
+                     "metrics": {"tok_per_s": tps, "p50_s": p50,
+                                 "p99_s": p99, "tokens": total,
+                                 "group_size": eng.pool.group_size,
+                                 "occupancy": eng.occupancy,
+                                 "vs_wave": tps / wave_tps,
+                                 "uuar_footprint": usage["uuars"]}})
+
+    write_bench_json("serve", rows, out=args.out)
 
 
 if __name__ == "__main__":

@@ -9,11 +9,30 @@ roofline seconds, ...).
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
 def row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def write_bench_json(name: str, rows: list, out: str = None):
+    """Write machine-readable results next to the CSV rows.
+
+    ``rows`` is a list of ``{"config": {...}, "metrics": {...}}`` dicts;
+    the file lands at ``$BENCH_OUT_DIR/BENCH_<name>.json`` (default CWD)
+    so CI can upload every ``BENCH_*.json`` as an artifact and the perf
+    trajectory accumulates across runs."""
+    path = out or os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                               f"BENCH_{name}.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"bench": name, "schema": "config->metrics",
+                   "rows": rows}, f, indent=1)
+    print(f"# wrote {path}")
+    return path
 
 
 def timed(fn, *args, repeat: int = 3):

@@ -1,7 +1,6 @@
 """Roofline benchmark: three terms per (arch x shape) from the dry-run
 artifacts (single-pod mesh, per the assignment)."""
 
-import json
 import os
 
 from repro.launch.roofline import load_rows, markdown_table

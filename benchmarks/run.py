@@ -16,6 +16,7 @@ BENCHES = [
     "bench_fig14_stencil",
     "bench_endpoint_collectives",
     "bench_serve_continuous",
+    "bench_fabric",
     "roofline",
 ]
 

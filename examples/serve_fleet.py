@@ -1,0 +1,43 @@
+"""Serving-fabric tour: one traffic burst, every dispatch category.
+
+Runs the canonical deterministic bursty trace through an 8-worker
+virtual-time fleet at each endpoint category and prints the paper's
+tradeoff at fleet scale: dedicated queues win the tail, the k-way-shared
+middle keeps >= 0.9x the throughput at a fraction of the endpoint
+footprint, the single shared funnel pays whole-fleet lock serialization.
+
+  PYTHONPATH=src python examples/serve_fleet.py
+"""
+
+from repro.core.endpoints import Category
+from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
+
+CATEGORIES = (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
+              Category.STATIC, Category.MPI_THREADS)
+
+
+def main():
+    trace = canonical_bursty_trace()
+    print(f"trace: {len(trace)} requests in bursts of 24, 8 workers x 4 "
+          "slots\n")
+    print(f"{'category':16s} {'queues':>6s} {'tok/s':>9s} {'p50ms':>7s} "
+          f"{'p99ms':>7s} {'occ':>5s} {'lockwait':>9s} {'uuar%':>6s}")
+    base = None
+    for cat in CATEGORIES:
+        router = build_sim_fleet(8, cat)
+        rep = router.run(trace)
+        base = base or rep
+        print(f"{cat.value:16s} {router.plan.n_queues:6d} "
+              f"{rep.tok_per_s:9,.0f} "
+              f"{rep.latency_percentile(0.5) / 1e6:7.2f} "
+              f"{rep.latency_percentile(0.99) / 1e6:7.2f} "
+              f"{rep.occupancy:5.2f} {rep.lock_wait_ns:8.0f}n "
+              f"{rep.endpoint_usage['uuars'] * 100:5.1f}%")
+    print("\nthe fleet-scale tradeoff: sharing the dispatch queues "
+          "collapses the endpoint footprint while throughput stays within "
+          "a few percent; only the tail latency pays, monotonically in "
+          "the sharing level.")
+
+
+if __name__ == "__main__":
+    main()

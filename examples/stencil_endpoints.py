@@ -9,17 +9,16 @@ as their own process).
 """
 
 import os
-import sys
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax                                    # noqa: E402
 import jax.numpy as jnp                       # noqa: E402
-import numpy as np                            # noqa: E402
 from jax.sharding import PartitionSpec as P   # noqa: E402
 
 from repro.comm.costs import estimate_sync_time     # noqa: E402
+from repro.compat import shard_map                  # noqa: E402
 from repro.core.channels import plan_for            # noqa: E402
 from repro.core.endpoints import Category           # noqa: E402
 from repro.launch.mesh import make_mesh             # noqa: E402
@@ -51,7 +50,7 @@ def main():
         out, _ = jax.lax.scan(body, grid, None, length=STEPS)
         return out
 
-    sharded = jax.shard_map(run, mesh=mesh, in_specs=P("ranks"),
+    sharded = shard_map(run, mesh=mesh, in_specs=P("ranks"),
                             out_specs=P("ranks"))
     grid = jax.random.normal(jax.random.PRNGKey(0), (GRID, GRID))
     out = jax.jit(sharded)(grid)

@@ -11,7 +11,6 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import jax                                    # noqa: E402
-import numpy as np                            # noqa: E402
 
 from repro.configs import get_smoke_config    # noqa: E402
 from repro.core.endpoints import Category     # noqa: E402

@@ -20,18 +20,17 @@ every q-th bucket with a data dependency to bound in-flight buffers.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional, Sequence, Union
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
 from repro.core.channels import ChannelPlan, plan_for
 from repro.core.endpoints import Category
 from repro.comm.bucketing import (BucketPlan, make_bucket_plan, pack_buckets,
                                   unpack_buckets)
-from repro.comm.compression import Int8Compressor, NoCompressor
+from repro.comm.compression import NoCompressor
 
 
 class GradSyncEngine:
@@ -83,7 +82,7 @@ class GradSyncEngine:
     def world_size(self):
         n = 1
         for ax in self.axis_names:
-            n *= jax.lax.axis_size(ax)
+            n *= axis_size(ax)
         return n
 
     def __call__(self, grads, compressor_state=()):

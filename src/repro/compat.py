@@ -1,0 +1,61 @@
+"""Version shims for the pinned jax.
+
+The repo targets current jax APIs but must run on the pinned 0.4.x
+interpreter; each shim prefers the modern name and falls back to the
+0.4.x equivalent.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    import functools
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        # 0.4.x rejects scan-carried psum results with a spurious
+        # "mismatched replication types"; its own error message names
+        # check_rep=False as the workaround
+        kwargs.setdefault("check_rep", False)
+        return _shard_map(*args, **kwargs)
+
+try:
+    set_mesh = jax.set_mesh
+except AttributeError:
+    import contextlib
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # pre-set_mesh jax: Mesh is itself a context manager and explicit
+        # NamedShardings carry their mesh, so entering it is sufficient
+        with mesh:
+            yield mesh
+
+
+def axis_size(ax) -> int:
+    """``jax.lax.axis_size`` is post-0.4.x; ``psum(1, ax)`` is the
+    portable equivalent (constant-folded under jit)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    return fn(ax) if fn is not None else jax.lax.psum(1, ax)
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types`` kwargs for ``jax.make_mesh``: Auto on jax versions
+    that have ``jax.sharding.AxisType``, nothing on 0.4.x (which neither
+    has the enum nor accepts the kwarg)."""
+    t = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (t.Auto,) * n_axes} if t is not None else {}
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returned a one-element list of dicts on
+    0.4.x and a plain dict on current jax; normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -19,8 +19,10 @@ dedicated-path performance with a fraction of the resources.
 from __future__ import annotations
 
 import dataclasses
+import math
 
-from repro.core.endpoints import Category
+from repro.core.endpoints import (Category, EndpointModel,
+                                  sharing_group_size)
 
 # Default number of channel "lanes", mirroring the paper's 16-thread socket.
 DEFAULT_LANES = 16
@@ -63,6 +65,53 @@ class ChannelPlan:
         """Channel staging buffers held live (the uUAR-usage analogue)."""
         k = self.n_buckets(n_producers)
         return 2 * k if self.double_buffered else k
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """How a worker fleet maps onto dispatch queues (the serving-fabric
+    realization of the endpoint categories, DESIGN.md §9).
+
+    A dispatch queue is the fleet-level analogue of a communication
+    endpoint: a dedicated queue per worker is MPI everywhere (peak
+    independence, peak footprint), one global queue funnelling every
+    worker is MPI+threads, and k-way-shared queue groups — ``group_size``
+    workers draining one queue — are the scalable middle.  The group size
+    comes from ``Category.level`` via ``sharing_group_size`` so the fleet,
+    the slot pools, and the endpoint model stay one abstraction.
+    """
+
+    category: Category
+    n_workers: int
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError("a fleet needs at least one worker")
+
+    @property
+    def group_size(self) -> int:
+        return sharing_group_size(self.category, self.n_workers)
+
+    @property
+    def n_queues(self) -> int:
+        return math.ceil(self.n_workers / self.group_size)
+
+    def queue_of(self, worker: int) -> int:
+        """Dispatch queue the given worker drains."""
+        return worker // self.group_size
+
+    def workers_of(self, queue: int) -> range:
+        """Workers draining the given dispatch queue."""
+        lo = queue * self.group_size
+        return range(lo, min(lo + self.group_size, self.n_workers))
+
+    def endpoint_usage(self) -> dict:
+        """Aggregate endpoint footprint of the fleet relative to a
+        dedicated-path-per-worker deployment (Table 1 numbers), reported
+        next to throughput so the fabric bench shows both sides of the
+        paper's tradeoff."""
+        return EndpointModel.build(
+            self.category, self.n_workers).relative_usage()
 
 
 def plan_for(category: Category, *, lanes: int = DEFAULT_LANES,

@@ -16,7 +16,7 @@ import math
 from typing import Optional
 
 from repro.core import resources as R
-from repro.core.policy import MLX5Context, UUARClass
+from repro.core.policy import MLX5Context
 
 
 class Category(enum.Enum):
@@ -40,6 +40,22 @@ class Category(enum.Enum):
             Category.STATIC: 3,
             Category.MPI_THREADS: 4,
         }[self]
+
+
+def sharing_group_size(category: Category, n: int) -> int:
+    """Sharing level (Fig. 4b) -> size of the group of ``n`` consumers that
+    share one resource path:
+
+    level 1 (dedicated paths)      -> 1 per group
+    level 2 (pairs share a UAR)    -> 2 per group
+    level 3 (static uUAR sharing)  -> 4 per group (the 4 static uUARs)
+    level 4 (one shared QP)        -> one group of all ``n``
+
+    This single mapping drives both the serving slot pools
+    (``serve.slots.SlotPool``) and the fleet dispatch plans
+    (``core.channels.DispatchPlan``), so every layer of the system shares
+    one notion of "k-way shared"."""
+    return min({1: 1, 2: 2, 3: 4, 4: n}[category.level], max(1, n))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,7 @@ The data path being modeled is Appendix C / Fig. 17:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 CACHE_LINE = 64
 

@@ -23,13 +23,14 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis, set_mesh
 from repro.configs import ARCHS, get_config
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import (SHAPES, batch_specs, cache_specs,
                                  cell_applicable, decode_token_specs)
-from repro.launch.sharding import (RULE_PRESETS, param_shardings,
-                                   make_shard_fn, shard_struct)
+from repro.launch.sharding import (RULE_PRESETS, make_shard_fn,
+                                   shard_struct)
 from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step)
 from repro.models.model import Model
@@ -116,7 +117,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules_preset: str = "auto",
             params_sds)
 
     accum = accum_override or auto_accum(cfg, cell, mesh, rules)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if cell.kind == "train":
             opt, opt_sds = _opt_specs(model, mesh, rules, params_sds,
                                       preset, master_fp32=params_bf16)
@@ -146,7 +147,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rules_preset: str = "auto",
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     hlo = analyze(compiled.as_text())
     n_chips = mesh.devices.size
     record = {

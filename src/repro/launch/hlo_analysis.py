@@ -19,9 +19,7 @@ records in each while op's backend_config, giving trip-aware:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from collections import defaultdict
 from typing import Dict, Optional
 
 _DTYPE_BYTES = {

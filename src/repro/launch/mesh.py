@@ -11,9 +11,11 @@ dry-run forces 512), the first prod(shape) devices are used.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
+
+from repro.compat import mesh_axis_types_kwargs
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
@@ -25,9 +27,8 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
             f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} "
             "(the dry-run must set XLA_FLAGS="
             "--xla_force_host_platform_device_count before importing jax)")
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices[:n],
+                         **mesh_axis_types_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -1,4 +1,4 @@
-"""Serving launcher: batched greedy decoding, wave or continuous engine.
+"""Serving launcher: single engine (wave/continuous) or a worker fleet.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 8 --prompt-len 16 --max-new 12
@@ -6,6 +6,11 @@
   # continuous batching with a dedicated slot per request:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --engine continuous --category mpi_everywhere --mixed-lengths
+
+  # a fleet: 4 real engine workers behind the fabric router, dispatch
+  # queues shared pairwise (the k-way-shared middle):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --workers 4 --category shared_dynamic --traffic bursty --requests 24
 """
 
 from __future__ import annotations
@@ -20,34 +25,68 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.endpoints import Category
 from repro.models.model import Model
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.fabric import (EngineWorker, Router, TRAFFIC_SHAPES,
+                                bursty_trace, poisson_trace, session_trace)
+from repro.serve.fabric.placement import POLICIES
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCHS))
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", default="wave",
-                    choices=("wave", "continuous"))
-    ap.add_argument("--category", default="mpi_everywhere",
-                    choices=[c.value for c in Category],
-                    help="slot-pool sharing category (continuous engine)")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--mixed-lengths", action="store_true",
-                    help="draw prompt lengths from {1/2, 1, 2}x prompt-len")
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def make_trace(args):
+    """Traffic for fleet mode honoring the request-shape flags: prompts
+    drawn from --prompt-len (or the {1/2, 1, 2}x mix), budgets up to
+    --max-new."""
+    p = args.prompt_len
+    prompt_lens = (max(1, p // 2), p, 2 * p) if args.mixed_lengths else (p,)
+    new_tokens = (max(1, args.max_new // 2), args.max_new)
+    if args.traffic == "poisson":
+        return poisson_trace(args.requests, prompt_lens=prompt_lens,
+                             new_tokens=new_tokens, seed=args.seed)
+    if args.traffic == "bursty":
+        return bursty_trace(args.requests, prompt_lens=prompt_lens,
+                            new_tokens=new_tokens, seed=args.seed)
+    return session_trace(max(1, args.requests // 4), 4,
+                         prompt_lens=prompt_lens, new_tokens=new_tokens,
+                         seed=args.seed)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+
+def run_fleet(cfg, params, args) -> None:
+    category = Category(args.category)
+    workers = [
+        EngineWorker(
+            w,
+            ContinuousEngine(cfg, params, n_slots=args.slots,
+                             max_len=args.max_len,
+                             use_ragged_kernel=args.ragged_kernel),
+            vocab=cfg.vocab)
+        for w in range(args.workers)]
+    router = Router(workers, category, placement=args.placement)
+    trace = make_trace(args)
+    t0 = time.time()
+    rep = router.run(trace)
+    dt = time.time() - t0
+    u = rep.endpoint_usage
+    print(f"fleet: {rep.n_workers} workers, category={category.value} "
+          f"({router.plan.n_queues} dispatch queues, "
+          f"group size {router.plan.group_size}), "
+          f"placement={rep.placement}, traffic={args.traffic}")
+    print(f"  {rep.n_completed}/{rep.n_arrivals} requests, "
+          f"{rep.total_new_tokens} tokens in {rep.makespan_ns / 1e6:.2f} "
+          f"virtual ms ({rep.tok_per_s:,.0f} tok/s; host {dt:.2f}s)")
+    print(f"  p50={rep.latency_percentile(0.5) / 1e6:.2f}ms "
+          f"p99={rep.latency_percentile(0.99) / 1e6:.2f}ms "
+          f"occupancy={rep.occupancy:.2f} fairness={rep.fairness:.3f} "
+          f"lock_wait={rep.lock_wait_ns:.0f}ns")
+    print(f"  endpoint footprint vs dedicated: "
+          f"uuars={u['uuars'] * 100:.1f}% memory={u['memory'] * 100:.1f}%")
+    for c in rep.completions[:4]:
+        print(f"  req {c.rid} (worker {c.worker}): {c.output}")
+
+
+def run_single(cfg, params, args) -> None:
     if args.engine == "continuous":
         engine = ContinuousEngine(cfg, params, n_slots=args.slots,
                                   max_len=args.max_len,
-                                  category=Category(args.category))
+                                  category=Category(args.category),
+                                  use_ragged_kernel=args.ragged_kernel)
     else:
         engine = ServeEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len)
@@ -76,6 +115,57 @@ def main(argv=None):
               f"{engine.stats['decode_steps']} decode steps")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.output}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default=None,
+                    choices=("wave", "continuous"),
+                    help="single-engine scheduler (default wave); a "
+                         "fleet (--workers > 1) is always continuous")
+    ap.add_argument("--category", default="mpi_everywhere",
+                    choices=[c.value for c in Category],
+                    help="sharing category: slot pool (single engine) or "
+                         "dispatch queues (--workers > 1)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="> 1 serves through the fabric router with this "
+                         "many continuous-engine workers")
+    ap.add_argument("--placement", default="round_robin",
+                    choices=sorted(POLICIES))
+    ap.add_argument("--traffic", default="bursty",
+                    choices=sorted(TRAFFIC_SHAPES))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw prompt lengths from {1/2, 1, 2}x prompt-len")
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--ragged-kernel", action="store_true",
+                    help="decode attention through the Pallas ragged "
+                         "kernel (interpret mode off-TPU)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.workers > 1 and args.engine == "wave":
+        ap.error("--workers > 1 serves through continuous-engine workers; "
+                 "--engine wave only applies to a single engine")
+    args.engine = args.engine or "wave"
+    pmax = args.prompt_len * (2 if args.mixed_lengths else 1)
+    if args.workers > 1 and pmax + args.max_new >= args.max_len:
+        # fleet accounting needs every request to fit; the single-engine
+        # path instead truncates at the cache budget (a supported mode)
+        ap.error(f"longest prompt ({pmax}) + max-new ({args.max_new}) "
+                 f"must fit max-len ({args.max_len}) in fleet mode")
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.workers > 1:
+        run_fleet(cfg, params, args)
+    else:
+        run_single(cfg, params, args)
 
 
 if __name__ == "__main__":

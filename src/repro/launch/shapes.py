@@ -10,14 +10,12 @@ architectures (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.launch.mesh import data_axes
 from repro.launch.sharding import batch_spec, kv_cache_spec
 from repro.models.model import Model
 

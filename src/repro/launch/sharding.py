@@ -15,7 +15,6 @@ Rule presets:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence
 
 import jax

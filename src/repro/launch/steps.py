@@ -5,16 +5,15 @@ the shard_map DDP step whose gradient sync goes through the endpoint engine
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.comm.engine import GradSyncEngine
+from repro.compat import shard_map
 from repro.core.endpoints import Category
 from repro.launch.mesh import data_axes
-from repro.launch.sharding import make_shard_fn
 from repro.models.model import Model
 from repro.optim.adamw import AdamW
 
@@ -134,7 +133,7 @@ def make_ddp_train_step(model: Model, opt: AdamW, mesh,
 
     batch_rank_specs = P(axes if len(axes) > 1 else axes[0])
     shard = partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(), P(), batch_rank_specs, P()),
         out_specs=(P(), P(), P(), P()))
     return shard(step), engine

@@ -9,13 +9,11 @@ O(block) memory, so 32k prefill never materializes an S x S score tensor.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.layers import apply_norm, apply_rope, norm_specs
 from repro.models.params import ParamSpec
 
 NEG_INF = -1e30

@@ -4,7 +4,6 @@ under remat (vocab 152k x 1M tokens would otherwise be ~300 GB)."""
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

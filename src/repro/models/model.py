@@ -15,8 +15,6 @@ enc-dec       : {"enc_embeds": (B,Se,d) bf16, "tokens": (B,Sd) i32,
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +25,7 @@ from repro.models.attention import select_attention
 from repro.models.layers import (apply_norm, embed_specs, embed_tokens,
                                  head_matrix, norm_specs)
 from repro.models.losses import chunked_softmax_xent
-from repro.models.transformer import (BlockCtx, LayerPlan, apply_stack,
+from repro.models.transformer import (BlockCtx, apply_stack,
                                       init_stack_cache, make_plan,
                                       stack_specs_tree)
 
@@ -102,7 +100,7 @@ class Model:
 
     def forward(self, params, batch, *, mode="train", cache=None,
                 shard_fn=lambda a, *n: a, remat=True,
-                skip_future=False):
+                skip_future=False, use_ragged_kernel=False):
         """-> (hidden (B,S,d), new_cache, aux_loss)."""
         cfg = self.cfg
         x, pos = self._inputs(params, batch)
@@ -118,7 +116,8 @@ class Model:
                        enc_out=enc_out, shard_fn=shard_fn,
                        decode_idx=(cache or {}).get("idx"),
                        window_cache=(cfg.attn_window > 0
-                                     and cfg.sub_quadratic))
+                                     and cfg.sub_quadratic),
+                       ragged_kernel=use_ragged_kernel and mode == "decode")
         stack_cache = None if cache is None else cache["stack"]
         h, new_stack, aux = apply_stack(params["decoder"], x, cfg, self.plan,
                                         ctx, cache=stack_cache, remat=remat)
@@ -183,13 +182,19 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params, cache, tokens=None, embeds=None,
-                    shard_fn=lambda a, *n: a):
+                    shard_fn=lambda a, *n: a, use_ragged_kernel=False):
         """One decode step.  tokens: (B,) i32 (or embeds (B,d)).
         -> (logits (B,V) fp32, new_cache).
 
         With a ``per_slot`` cache (``idx`` is (B,)), each row decodes at
         its own position: RoPE, the cache write, and the attention mask
-        all follow ``idx[b]`` (continuous batching)."""
+        all follow ``idx[b]`` (continuous batching).
+
+        ``use_ragged_kernel`` routes eligible per-slot decode attention
+        (full-context layers, vector ``idx``) through the Pallas
+        ``flash_decode_attention`` kernel — the TPU data path; interpret
+        mode (bit-exact semantics) everywhere else.  Rolling-window layers
+        keep the jnp path, which stays the oracle either way."""
         cfg = self.cfg
         idx = cache["idx"]
         if tokens is not None:
@@ -207,7 +212,8 @@ class Model:
         batch["positions"] = pos
         h, new_cache, _ = self.forward(params, batch, mode="decode",
                                        cache=cache, shard_fn=shard_fn,
-                                       remat=False)
+                                       remat=False,
+                                       use_ragged_kernel=use_ragged_kernel)
         head = head_matrix(params["embed"], cfg)
         logits = (h[:, 0, :] @ head.astype(h.dtype)).astype(jnp.float32)
         return logits, new_cache

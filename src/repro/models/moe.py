@@ -11,7 +11,6 @@ with f_e the token fraction and p_e the mean router probability.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,15 +11,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models import attention as attn_mod
 from repro.models.attention import (attention_decode, attn_specs, project_kv,
-                                    project_q, select_attention)
+                                    project_q)
 from repro.models.layers import (apply_ffn, apply_norm, apply_rope,
                                  ffn_specs, norm_specs)
 from repro.models.moe import apply_moe, moe_specs
@@ -28,7 +27,7 @@ from repro.models.recurrent import (apply_rglru_block, init_rglru_cache,
 from repro.models.xlstm import (apply_mlstm_block, apply_slstm_block,
                                 init_mlstm_cache, init_slstm_cache,
                                 mlstm_specs, slstm_specs)
-from repro.models.params import ParamSpec, stack_specs
+from repro.models.params import stack_specs
 
 ATTN_KINDS = ("attn", "attn_local")
 
@@ -144,6 +143,7 @@ class BlockCtx:
     shard_fn: Any = staticmethod(lambda a, *names: a)
     decode_idx: Any = None            # scalar int32 in decode/prefill-resume
     window_cache: bool = False        # rolling window KV cache
+    ragged_kernel: bool = False       # per-slot decode via Pallas kernel
 
 
 def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool):
@@ -165,6 +165,18 @@ def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool):
     k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
     return {"k": k, "v": v}
+
+
+def _ragged_kv_block(smax: int, target: int = 256) -> int:
+    """Largest divisor of the cache length <= ``target`` — the kernel
+    requires kv_block | Smax, and Smax (= engine max_len) is static.
+    Callers must fall back to the jnp path when this degrades (a
+    near-prime Smax has only tiny divisors, and a 1-wide kv block means
+    Smax sequential grid steps per layer)."""
+    for kb in range(min(target, smax), 0, -1):
+        if smax % kb == 0:
+            return kb
+    return smax
 
 
 def _decode_valid_mask(smax, idx, window: int, rolling: bool):
@@ -207,6 +219,19 @@ def _self_attention(p, h, ctx: BlockCtx, window: int, cache):
             out = attention_decode(q, new_kv["k"], new_kv["v"],
                                    ctx.decode_idx, valid_mask=valid,
                                    softcap=cfg.attn_logit_softcap)
+        elif (ctx.ragged_kernel and window == 0
+                and jnp.ndim(ctx.decode_idx) == 1
+                and _ragged_kv_block(cache["k"].shape[1])
+                >= min(64, cache["k"].shape[1])):
+            # per-slot full-context decode: the ragged Pallas kernel skips
+            # whole kv blocks past each slot's length (TPU data path;
+            # interpret mode on CPU — ops.py picks per backend)
+            from repro.kernels.flash_attention.ops import \
+                flash_decode_attention
+            out = flash_decode_attention(
+                q, new_kv["k"], new_kv["v"], ctx.decode_idx,
+                softcap=cfg.attn_logit_softcap,
+                kv_block=_ragged_kv_block(new_kv["k"].shape[1]))
         else:
             out = attention_decode(q, new_kv["k"], new_kv["v"],
                                    ctx.decode_idx, window=window,

@@ -22,6 +22,7 @@ lowers, so serving exercises exactly the production path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import defaultdict, deque
 from typing import Dict, List, Optional
@@ -129,6 +130,20 @@ class ServeEngine:
         return self.done
 
 
+@functools.lru_cache(maxsize=None)
+def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool):
+    """One (Model, jitted decode/prefill/merge) set per config — engines
+    of a fleet share executables instead of re-jitting identical
+    lambdas per worker (N-fold compile otherwise)."""
+    model = Model(cfg)
+    decode = jax.jit(
+        lambda p, c, t: model.decode_step(
+            p, c, tokens=t, use_ragged_kernel=use_ragged_kernel))
+    prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+    merge = jax.jit(_scatter_slot)
+    return model, decode, prefill, merge
+
+
 def _scatter_slot(full, one, slot):
     """Insert the batch-1 cache ``one`` as batch row ``slot`` of ``full``
     and pin that slot's position to the prompt length.  Prefix block
@@ -162,11 +177,11 @@ class ContinuousEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 512,
                  category: Category = Category.MPI_EVERYWHERE,
-                 pool: Optional[SlotPool] = None):
+                 pool: Optional[SlotPool] = None,
+                 use_ragged_kernel: bool = False):
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
             "the continuous engine serves decoder-only token models"
         self.cfg = cfg
-        self.model = Model(cfg)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -179,13 +194,14 @@ class ContinuousEngine:
         # the pool's occupancy (1.0 = every slot useful every step)
         self.stats = {"decode_steps": 0, "slot_steps": 0,
                       "busy_slot_steps": 0, "prefills": 0}
-        self._decode = jax.jit(
-            lambda p, c, t: self.model.decode_step(p, c, tokens=t))
-        self._prefill = jax.jit(
-            lambda p, b, c: self.model.prefill(p, b, c))
-        self._merge = jax.jit(_scatter_slot)
+        (self.model, self._decode, self._prefill,
+         self._merge) = _shared_steps(cfg, use_ragged_kernel)
         self._t0 = 0.0
-        self._slot_req: List[Optional[Request]] = []
+        self._started = False
+        self._cache = None
+        # pre-start shape so free_slots()/admissible_slots() work before
+        # start() (the cache itself is allocated lazily there)
+        self._slot_req: List[Optional[Request]] = [None] * n_slots
         self._next_tok = None
         self._remaining = None
         self._pos = None
@@ -218,49 +234,100 @@ class ContinuousEngine:
         self.done.append(req)
         self._slot_req[slot] = None
 
-    # ----- main loop ------------------------------------------------------
-    def run(self) -> List[Request]:
-        self._t0 = time.perf_counter()
+    # ----- external stepping ---------------------------------------------
+    # The serving fabric (serve/fabric/) drives workers in virtual time, so
+    # the engine's lifecycle is exposed as start / admit_waiting / step and
+    # run() is just the single-worker loop over them.
+
+    def start(self):
+        """Allocate the persistent slot cache and reset per-slot state.
+        Idempotent: calling twice without run/step in between is a no-op."""
+        if self._started:
+            return
         b = self.n_slots
-        cache = self.model.init_cache(b, self.max_len, per_slot=True)
+        self._t0 = time.perf_counter()
+        self._cache = self.model.init_cache(b, self.max_len, per_slot=True)
         self._slot_req = [None] * b
         self._next_tok = np.zeros(b, np.int32)
         self._remaining = np.zeros(b, np.int64)
         self._pos = np.zeros(b, np.int64)
+        self._started = True
 
-        while self.queue or any(r is not None for r in self._slot_req):
-            if self.queue:
-                occupied = [r is not None for r in self._slot_req]
-                for slot in self.pool.admissible(occupied):
-                    if not self.queue:
-                        break
-                    cache = self._admit(cache, slot, self.queue.popleft())
-            active = [i for i, r in enumerate(self._slot_req)
-                      if r is not None]
-            if not active:       # queue drained mid-check
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def free_slots(self) -> List[int]:
+        """Slots the pool could admit to regardless of the wait queue —
+        the fabric's capacity probe (`serve.fabric.EngineWorker`)."""
+        occupied = [r is not None for r in self._slot_req]
+        return self.pool.admissible(occupied)
+
+    def admissible_slots(self) -> List[int]:
+        """Slots the pool would admit to right now, bounded by the wait
+        queue (empty queue -> [] without scanning the groups)."""
+        occupied = [r is not None for r in self._slot_req]
+        return self.pool.admissible(occupied, queue_len=len(self.queue))
+
+    def admit_waiting(self) -> int:
+        """Admit queued requests into every admissible slot; -> count.
+        Starts the engine if the caller has not (start() is idempotent)."""
+        self.start()
+        n = 0
+        for slot in self.admissible_slots():
+            if not self.queue:
                 break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(self._next_tok))
-            self.stats["decode_steps"] += 1
-            self.stats["slot_steps"] += b
-            self.stats["busy_slot_steps"] += len(active)
-            produced = self._next_tok.copy()
-            # np.array (copy): admission writes the prefill token in-place
-            nxt = np.array(jnp.argmax(logits, -1), np.int32)
-            self._pos += 1       # every row's cache index advanced
-            for i in active:
-                r = self._slot_req[i]
-                r.output.append(int(produced[i]))
-                self._remaining[i] -= 1
-                finished = (self._remaining[i] <= 0
-                            or (r.eos_id is not None
-                                and int(nxt[i]) == r.eos_id))
-                if not finished and self._pos[i] >= self.max_len - 1:
-                    r.output.append(int(nxt[i]))   # budget exhausted
-                    finished = True
-                if finished:
-                    self._retire(i)
-            self._next_tok = nxt
+            self._cache = self._admit(self._cache, slot,
+                                      self.queue.popleft())
+            n += 1
+        return n
+
+    def step(self) -> List[Request]:
+        """One decode step over every live slot; -> requests retired by
+        this step (possibly admitted this very step: a request whose
+        budget is one token frees its slot again immediately)."""
+        active = [i for i, r in enumerate(self._slot_req) if r is not None]
+        if not active:
+            return []
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           jnp.asarray(self._next_tok))
+        self.stats["decode_steps"] += 1
+        self.stats["slot_steps"] += self.n_slots
+        self.stats["busy_slot_steps"] += len(active)
+        produced = self._next_tok.copy()
+        # np.array (copy): admission writes the prefill token in-place
+        nxt = np.array(jnp.argmax(logits, -1), np.int32)
+        self._pos += 1       # every row's cache index advanced
+        retired: List[Request] = []
+        for i in active:
+            r = self._slot_req[i]
+            r.output.append(int(produced[i]))
+            self._remaining[i] -= 1
+            finished = (self._remaining[i] <= 0
+                        or (r.eos_id is not None
+                            and int(nxt[i]) == r.eos_id))
+            if not finished and self._pos[i] >= self.max_len - 1:
+                r.output.append(int(nxt[i]))   # budget exhausted
+                finished = True
+            if finished:
+                self._retire(i)
+                retired.append(r)
+        self._next_tok = nxt
+        return retired
+
+    # ----- main loop ------------------------------------------------------
+    def run(self) -> List[Request]:
+        self.start()
+        self._t0 = time.perf_counter()   # latency baseline per run(), not
+        while self.has_work:             # per start() (which is idempotent)
+            self.admit_waiting()
+            if not self.step():       # no live slot: queue drained mid-check
+                if self.n_active == 0:
+                    break
         return self.done
 
     @property

@@ -1,0 +1,21 @@
+"""Serving fabric: router, dispatch channels, and a worker fleet whose
+queue sharing structure is keyed by the paper's endpoint categories
+(DESIGN.md §9)."""
+
+from repro.serve.fabric.channels import DispatchChannel
+from repro.serve.fabric.placement import POLICIES, make_policy
+from repro.serve.fabric.router import (Completion, EngineWorker,
+                                       FabricCosts, FleetReport, Router,
+                                       SimWorker, build_sim_fleet)
+from repro.serve.fabric.traffic import (Arrival, TRAFFIC_SHAPES,
+                                        bursty_trace,
+                                        canonical_bursty_trace,
+                                        poisson_trace, session_trace)
+
+__all__ = [
+    "Arrival", "Completion", "DispatchChannel", "EngineWorker",
+    "FabricCosts", "FleetReport", "POLICIES", "Router", "SimWorker",
+    "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
+    "canonical_bursty_trace", "make_policy", "poisson_trace",
+    "session_trace",
+]

@@ -1,0 +1,62 @@
+"""Dispatch channels: the fleet-level endpoints of the serving fabric.
+
+A ``DispatchChannel`` is one request queue plus the serially-held lock
+protecting it — the same ``Resource`` next-free timeline the ibsim sender
+loop uses for QP/uUAR/CQ locks (``core.ibsim.engine.Resource``), so
+queueing contention *emerges* from how many workers the
+``core.channels.DispatchPlan`` hangs off one channel rather than being a
+per-category constant: a dedicated channel per worker never waits on its
+lock, a k-way-shared channel serializes the k group members' pops inside
+a burst, and the single global channel of the MPI+threads plan serializes
+the whole fleet.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional, Tuple
+
+from repro.core.ibsim.engine import Resource
+
+
+class DispatchChannel:
+    """One dispatch queue shared by a group of workers."""
+
+    def __init__(self, cid: int, workers):
+        self.cid = cid
+        self.workers = tuple(workers)
+        self._q: deque = deque()
+        self.lock = Resource()
+        self.stats = {"enqueued": 0, "dequeued": 0,
+                      "lock_wait_ns": 0.0, "lock_hold_ns": 0.0,
+                      "peak_depth": 0}
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def _locked(self, t_ns: float, hold_ns: float) -> float:
+        start, end = self.lock.acquire(t_ns, hold_ns)
+        self.stats["lock_wait_ns"] += start - t_ns
+        self.stats["lock_hold_ns"] += hold_ns
+        return end
+
+    def push(self, t_ns: float, item, hold_ns: float) -> float:
+        """Enqueue at ``t_ns``; -> virtual time the lock was released."""
+        end = self._locked(t_ns, hold_ns)
+        self._q.append(item)
+        self.stats["enqueued"] += 1
+        self.stats["peak_depth"] = max(self.stats["peak_depth"],
+                                       len(self._q))
+        return end
+
+    def pop(self, t_ns: float, hold_ns: float) -> Tuple[Optional[object],
+                                                        float]:
+        """Dequeue at ``t_ns``; -> (item or None, lock release time).
+        The emptiness probe is lock-free (len()); only a successful pop
+        pays the lock, so idle group members never inflate contention."""
+        if not self._q:
+            return None, t_ns
+        end = self._locked(t_ns, hold_ns)
+        item = self._q.popleft()
+        self.stats["dequeued"] += 1
+        return item, end

@@ -1,0 +1,80 @@
+"""Placement policies: which dispatch channel admits a new arrival.
+
+A policy sees only fabric-visible state — per-channel queue depths and the
+aggregate in-flight load of each channel's worker group — and returns a
+channel id.  Policies are deterministic (ties break toward the lowest
+channel id) so a trace replays identically.
+
+Note the interaction with the dispatch category: under the fully shared
+plan there is one channel and placement is moot; under dedicated
+per-worker channels placement is the ONLY load balancer; the k-way-shared
+middle needs placement only across groups while members self-balance by
+pulling.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.serve.fabric.traffic import Arrival
+
+
+class PlacementPolicy:
+    """Base: choose a channel for an arrival."""
+
+    name = "base"
+
+    def choose(self, arrival: Arrival, depths: List[int],
+               loads: List[int]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(PlacementPolicy):
+    """Blind rotation over channels (the no-information baseline)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, arrival, depths, loads):
+        q = self._next % len(depths)
+        self._next += 1
+        return q
+
+
+class LeastLoaded(PlacementPolicy):
+    """Channel whose queue + worker group carries the least work."""
+
+    name = "least_loaded"
+
+    def choose(self, arrival, depths, loads):
+        total = [d + l for d, l in zip(depths, loads)]
+        return min(range(len(total)), key=lambda q: (total[q], q))
+
+
+class SessionAffinity(PlacementPolicy):
+    """Sticky mapping of a session (prefix-cache key) to one channel, so
+    repeat turns land where their KV prefix is warm; sessionless arrivals
+    fall back to least-loaded."""
+
+    name = "session_affinity"
+
+    def __init__(self):
+        self._fallback = LeastLoaded()
+
+    def choose(self, arrival, depths, loads):
+        if arrival.session >= 0:
+            return arrival.session % len(depths)
+        return self._fallback.choose(arrival, depths, loads)
+
+
+POLICIES = {p.name: p for p in (RoundRobin, LeastLoaded, SessionAffinity)}
+
+
+def make_policy(name: str) -> PlacementPolicy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown placement {name!r}; one of {sorted(POLICIES)}")

@@ -1,0 +1,358 @@
+"""Router + virtual-time fleet scheduler (DESIGN.md §9).
+
+The ``Router`` is the fabric frontend: it admits a traffic stream
+(``fabric.traffic``), places every arrival onto a ``DispatchChannel``
+(``fabric.placement`` chooses among the queues the
+``core.channels.DispatchPlan`` defines for the category), and drives N
+continuous-batching workers that pull from their group's channel.
+
+Scheduling is event-driven in VIRTUAL time — the scheduler contract:
+
+  * all times are float nanoseconds starting at 0; no wall clock anywhere;
+  * events are totally ordered by ``(t, seq)`` where ``seq`` is a
+    monotonic counter, so ties are deterministic;
+  * a worker is either *scheduled* (exactly one pending wake event) or
+    *idle* (zero events — an idle fleet burns no events, the no-spin
+    contract), and is woken by arrivals on its group's channel;
+  * every shared object (channel lock) is a serially-held ``Resource``
+    next-free timeline, so contention emerges from the category's sharing
+    structure, not from per-category constants.
+
+Identical (trace, config) pairs therefore replay identical schedules —
+fleet behavior is unit-testable without real parallelism.
+
+Two worker types share one protocol (``capacity`` / ``admit`` / ``step``):
+``SimWorker`` models decode cost only (bench sweeps: thousands of virtual
+requests in milliseconds of host time) and ``EngineWorker`` wraps a real
+``ContinuousEngine`` stepped externally (real tokens, virtual time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.channels import DispatchPlan
+from repro.core.endpoints import Category
+from repro.serve.engine import ContinuousEngine, Request
+from repro.serve.fabric.channels import DispatchChannel
+from repro.serve.fabric.placement import PlacementPolicy, make_policy
+from repro.serve.fabric.traffic import Arrival
+from repro.serve.slots import SlotPool
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricCosts:
+    """Virtual-time cost model of the fleet data path (ns).
+
+    Queue-lock holds sit at the scale of the ibsim CPU-side lock costs
+    (``core.ibsim.costmodel``); step costs sit at model-forward scale, so
+    lock contention is a second-order effect on throughput exactly as QP
+    locks are against the wire — it shows up in the p99, not the mean.
+    """
+
+    t_enqueue_ns: float = 120.0       # router holds the channel lock
+    t_dequeue_ns: float = 180.0       # worker holds the channel lock
+    t_admit_base_ns: float = 4_000.0  # slot bookkeeping per admission
+    t_admit_per_token_ns: float = 300.0   # prefill, per prompt token
+    t_step_base_ns: float = 30_000.0      # one fleet-worker decode step
+    t_step_per_slot_ns: float = 6_000.0   # marginal cost per live slot
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    worker: int
+    t_done_ns: float
+    new_tokens: int
+    output: Optional[list] = None     # real tokens (EngineWorker only)
+
+
+# ---------------------------------------------------------------------------
+# Workers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Live:
+    arrival: Arrival
+    remaining: int
+
+
+class SimWorker:
+    """Continuous-batching worker in pure virtual time (no model): each
+    live request needs ``max_new_tokens`` decode steps; a step decodes one
+    token for every live slot and costs ``t_step_base + n*t_step_per_slot``."""
+
+    def __init__(self, wid: int, *, n_slots: int = 4,
+                 costs: FabricCosts = FabricCosts(),
+                 slot_category: Category = Category.MPI_EVERYWHERE):
+        self.wid = wid
+        self.n_slots = n_slots
+        self.costs = costs
+        self.pool = SlotPool(slot_category, n_slots)
+        self._slots: List[Optional[_Live]] = [None] * n_slots
+        self.stats = {"steps": 0, "slot_steps": 0, "busy_slot_steps": 0,
+                      "tokens": 0, "admitted": 0}
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def capacity(self) -> int:
+        occupied = [s is not None for s in self._slots]
+        return len(self.pool.admissible(occupied))
+
+    def admit(self, arrival: Arrival, t_ns: float) -> float:
+        occupied = [s is not None for s in self._slots]
+        slots = self.pool.admissible(occupied, queue_len=1)
+        assert slots, "admit() called with no admissible slot"
+        self._slots[slots[0]] = _Live(arrival,
+                                      max(1, arrival.max_new_tokens))
+        self.stats["admitted"] += 1
+        return (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+
+    def step(self, t_ns: float):
+        """-> (cost_ns, completions finishing at t_ns + cost_ns)."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if not live:
+            return 0.0, []
+        cost = (self.costs.t_step_base_ns
+                + len(live) * self.costs.t_step_per_slot_ns)
+        t_end = t_ns + cost
+        done = []
+        self.stats["steps"] += 1
+        self.stats["slot_steps"] += self.n_slots
+        self.stats["busy_slot_steps"] += len(live)
+        self.stats["tokens"] += len(live)
+        for i in live:
+            s = self._slots[i]
+            s.remaining -= 1
+            if s.remaining <= 0:
+                done.append(Completion(
+                    rid=s.arrival.rid, worker=self.wid, t_done_ns=t_end,
+                    new_tokens=s.arrival.max_new_tokens))
+                self._slots[i] = None
+        return cost, done
+
+
+class EngineWorker:
+    """A real ``ContinuousEngine`` stepped externally: tokens are real
+    model output; time is the same virtual cost model as ``SimWorker`` so
+    a mixed fleet still schedules deterministically."""
+
+    def __init__(self, wid: int, engine: ContinuousEngine, *,
+                 costs: FabricCosts = FabricCosts(),
+                 prompt_fn: Optional[Callable[[Arrival], np.ndarray]] = None,
+                 vocab: int = 256):
+        self.wid = wid
+        self.engine = engine
+        self.costs = costs
+        self.n_slots = engine.n_slots
+        self.prompt_fn = prompt_fn or (lambda a: np.random.default_rng(
+            a.rid).integers(1, vocab, size=a.prompt_len).astype(np.int32))
+        self.stats = {"steps": 0, "slot_steps": 0, "busy_slot_steps": 0,
+                      "tokens": 0, "admitted": 0}
+        engine.start()
+
+    @property
+    def n_active(self) -> int:
+        return self.engine.n_active + len(self.engine.queue)
+
+    def capacity(self) -> int:
+        return max(0, len(self.engine.free_slots())
+                   - len(self.engine.queue))
+
+    def admit(self, arrival: Arrival, t_ns: float) -> float:
+        self.engine.submit(Request(rid=arrival.rid,
+                                   prompt=self.prompt_fn(arrival),
+                                   max_new_tokens=arrival.max_new_tokens))
+        self.stats["admitted"] += 1
+        return (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+
+    def step(self, t_ns: float):
+        self.engine.admit_waiting()
+        n_live = self.engine.n_active
+        if n_live == 0:
+            return 0.0, []
+        retired = self.engine.step()
+        cost = (self.costs.t_step_base_ns
+                + n_live * self.costs.t_step_per_slot_ns)
+        t_end = t_ns + cost
+        self.stats["steps"] += 1
+        self.stats["slot_steps"] += self.n_slots
+        self.stats["busy_slot_steps"] += n_live
+        self.stats["tokens"] += n_live
+        done = [Completion(rid=r.rid, worker=self.wid, t_done_ns=t_end,
+                           new_tokens=len(r.output), output=list(r.output))
+                for r in retired]
+        return cost, done
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetReport:
+    category: Category
+    placement: str
+    n_workers: int
+    n_arrivals: int
+    completions: List[Completion]
+    latency_ns: Dict[int, float]          # rid -> completion - arrival
+    makespan_ns: float
+    total_new_tokens: int
+    per_worker_tokens: List[int]
+    occupancy: float
+    lock_wait_ns: float
+    peak_depths: List[int]
+    endpoint_usage: dict
+
+    @property
+    def n_completed(self) -> int:
+        return len(self.completions)
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.total_new_tokens / max(self.makespan_ns, 1e-9) * 1e9
+
+    def latency_percentile(self, q: float) -> float:
+        lat = sorted(self.latency_ns.values())
+        if not lat:
+            return 0.0
+        return lat[int(q * (len(lat) - 1))]
+
+    @property
+    def fairness(self) -> float:
+        """Jain's index over per-worker token counts (1.0 = even split)."""
+        x = np.asarray(self.per_worker_tokens, np.float64)
+        if not x.sum():
+            return 1.0
+        return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
+
+
+class Router:
+    """Fabric frontend: place arrivals onto dispatch channels and drive
+    the worker fleet in virtual time."""
+
+    def __init__(self, workers: List, category: Category, *,
+                 placement: str = "round_robin",
+                 costs: FabricCosts = FabricCosts()):
+        if not workers:
+            raise ValueError("a fleet needs at least one worker")
+        self.workers = workers
+        self.category = category
+        self.costs = costs
+        self.plan = DispatchPlan(category, len(workers))
+        self.channels = [DispatchChannel(q, self.plan.workers_of(q))
+                         for q in range(self.plan.n_queues)]
+        self.policy: PlacementPolicy = make_policy(placement)
+        # scheduler state
+        self._heap: list = []
+        self._seq = 0
+        self._clock = [0.0] * len(workers)     # per-worker virtual time
+        self._scheduled = [False] * len(workers)
+        self._arrivals: Dict[int, Arrival] = {}
+        self.completions: List[Completion] = []
+        self._events = 0
+
+    # ----- event plumbing -------------------------------------------------
+    def _push(self, t: float, kind: str, data) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, data))
+        self._seq += 1
+
+    def _wake(self, w: int, t: float) -> None:
+        """Schedule worker ``w`` unless it already has a pending wake —
+        idle workers hold zero events (no spinning on empty queues)."""
+        if not self._scheduled[w]:
+            self._scheduled[w] = True
+            self._push(t, "wake", w)
+
+    # ----- handlers -------------------------------------------------------
+    def _on_arrival(self, t: float, arr: Arrival) -> None:
+        if arr.rid in self._arrivals:
+            raise ValueError(f"duplicate rid {arr.rid}")
+        self._arrivals[arr.rid] = arr
+        depths = [len(c) for c in self.channels]
+        loads = [sum(self.workers[w].n_active for w in c.workers)
+                 for c in self.channels]
+        qid = self.policy.choose(arr, depths, loads)
+        released = self.channels[qid].push(t, arr, self.costs.t_enqueue_ns)
+        for w in self.channels[qid].workers:
+            self._wake(w, max(released, self._clock[w]))
+
+    def _on_wake(self, t: float, w: int) -> None:
+        self._scheduled[w] = False
+        t = max(t, self._clock[w])
+        worker = self.workers[w]
+        chan = self.channels[self.plan.queue_of(w)]
+        while worker.capacity() > 0 and len(chan) > 0:
+            arr, t = chan.pop(t, self.costs.t_dequeue_ns)
+            if arr is None:       # a sibling drained it first
+                break
+            t += worker.admit(arr, t)
+        cost, done = worker.step(t)
+        if cost > 0.0:
+            t_end = t + cost
+            self.completions.extend(done)
+            self._clock[w] = t_end
+            self._wake(w, t_end)      # keep stepping while slots are live
+        else:
+            self._clock[w] = t        # idle: zero pending events
+
+    # ----- run ------------------------------------------------------------
+    def run(self, trace: List[Arrival]) -> FleetReport:
+        for arr in trace:
+            self._push(arr.t_ns, "arrival", arr)
+        while self._heap:
+            t, _, kind, data = heapq.heappop(self._heap)
+            self._events += 1
+            if kind == "arrival":
+                self._on_arrival(t, data)
+            else:
+                self._on_wake(t, data)
+
+        latency = {}
+        for c in self.completions:
+            arr = self._arrivals[c.rid]
+            latency[c.rid] = c.t_done_ns - arr.t_ns
+        makespan = max((c.t_done_ns for c in self.completions),
+                       default=0.0)
+        slot_steps = sum(w.stats["slot_steps"] for w in self.workers)
+        busy = sum(w.stats["busy_slot_steps"] for w in self.workers)
+        # derived from completions (not worker step counters) so it sums
+        # exactly to total_new_tokens even when an engine's budget-
+        # exhaustion path emits a final extra token
+        per_worker = [0] * len(self.workers)
+        for c in self.completions:
+            per_worker[c.worker] += c.new_tokens
+        return FleetReport(
+            category=self.category,
+            placement=self.policy.name,
+            n_workers=len(self.workers),
+            n_arrivals=len(self._arrivals),
+            completions=list(self.completions),
+            latency_ns=latency,
+            makespan_ns=makespan,
+            total_new_tokens=sum(c.new_tokens for c in self.completions),
+            per_worker_tokens=per_worker,
+            occupancy=busy / slot_steps if slot_steps else 0.0,
+            lock_wait_ns=sum(c.stats["lock_wait_ns"]
+                             for c in self.channels),
+            peak_depths=[c.stats["peak_depth"] for c in self.channels],
+            endpoint_usage=self.plan.endpoint_usage(),
+        )
+
+
+def build_sim_fleet(n_workers: int, category: Category, *,
+                    n_slots: int = 4, placement: str = "round_robin",
+                    costs: FabricCosts = FabricCosts()) -> Router:
+    """The bench/test entrypoint: N virtual workers behind a router."""
+    workers = [SimWorker(w, n_slots=n_slots, costs=costs)
+               for w in range(n_workers)]
+    return Router(workers, category, placement=placement, costs=costs)

@@ -18,9 +18,10 @@ neighbours' stragglers.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
-from repro.core.endpoints import Category, EndpointModel
+from repro.core.endpoints import (Category, EndpointModel,
+                                  sharing_group_size)
 
 
 def group_size_for(category: Category, n_slots: int) -> int:
@@ -30,8 +31,11 @@ def group_size_for(category: Category, n_slots: int) -> int:
     level 2 (pairs share a UAR)    -> 2 slots/group
     level 3 (static uUAR sharing)  -> 4 slots/group (the 4 static uUARs)
     level 4 (one shared QP)        -> all slots: static wave batching
+
+    Delegates to ``core.endpoints.sharing_group_size`` — the same mapping
+    that sizes the fleet dispatch groups (``core.channels.DispatchPlan``).
     """
-    return {1: 1, 2: 2, 3: 4, 4: n_slots}[category.level]
+    return sharing_group_size(category, n_slots)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,14 +56,24 @@ class SlotPool:
         return [range(lo, min(lo + g, self.n_slots))
                 for lo in range(0, self.n_slots, g)]
 
-    def admissible(self, occupied: Sequence[bool]) -> List[int]:
+    def admissible(self, occupied: Sequence[bool],
+                   queue_len: Optional[int] = None) -> List[int]:
         """Slots that may admit a queued request now: free slots whose
         whole group has drained (for group_size 1 that is simply every
-        free slot — true continuous batching)."""
+        free slot — true continuous batching).
+
+        ``queue_len`` bounds the answer to the number of requests actually
+        waiting: with an empty wait queue the scan returns [] immediately
+        instead of walking (and re-walking, every engine step) groups
+        nothing will be admitted to."""
+        if queue_len is not None and queue_len <= 0:
+            return []
         out: List[int] = []
         for grp in self.groups:
             if not any(occupied[i] for i in grp):
                 out.extend(grp)
+                if queue_len is not None and len(out) >= queue_len:
+                    return out[:queue_len]
         return out
 
     def endpoint_usage(self) -> dict:

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -25,8 +24,7 @@ from repro.data.pipeline import SyntheticLMData
 from repro.launch.steps import make_ddp_train_step, make_train_step
 from repro.models.model import Model
 from repro.optim.adamw import AdamW, cosine_schedule
-from repro.runtime.fault_tolerance import (StragglerMitigator, Supervisor,
-                                           TransientWorkerFailure)
+from repro.runtime.fault_tolerance import StragglerMitigator, Supervisor
 
 
 @dataclasses.dataclass

@@ -15,9 +15,9 @@ sys.path.insert(0, os.path.dirname(__file__))   # for _hypothesis_stub
 # (requirements-dev.txt pins the real package).  On a bare interpreter,
 # install the deterministic stub so the suite still collects and the
 # property tests replay a fixed sample instead of erroring at collection.
-try:
-    import hypothesis  # noqa: F401
-except ImportError:
+import importlib.util
+
+if importlib.util.find_spec("hypothesis") is None:
     import _hypothesis_stub
 
     sys.modules["hypothesis"] = _hypothesis_stub

@@ -1,12 +1,11 @@
 """Property tests: bucketing is a lossless, deterministic partition."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.comm.bucketing import make_bucket_plan, pack_buckets, unpack_buckets
-from repro.core.channels import ChannelPlan, plan_for
+from repro.core.channels import plan_for
 from repro.core.endpoints import Category
 
 

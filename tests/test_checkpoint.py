@@ -1,9 +1,5 @@
 """Checkpointing: roundtrip, async, atomic publish, pruning, elastic."""
 
-import json
-import os
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np

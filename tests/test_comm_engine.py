@@ -15,6 +15,7 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np, re
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.core.endpoints import Category
     from repro.comm.engine import GradSyncEngine
     from repro.launch.mesh import make_mesh
@@ -30,7 +31,7 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
     results, n_ar, nbytes = {}, {}, {}
     for cat in Category:
         eng = GradSyncEngine(cat, axis_names=("data",))
-        f = jax.shard_map(lambda g: eng(g)[0], mesh=mesh, in_specs=(P(),),
+        f = shard_map(lambda g: eng(g)[0], mesh=mesh, in_specs=(P(),),
                           out_specs=P())
         results[cat] = jax.jit(f)(grads)
         c = analyze(jax.jit(f).lower(grads).compile().as_text())

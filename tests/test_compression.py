@@ -1,6 +1,5 @@
 """Int8 error-feedback compressor properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,6 +1,5 @@
 """Data pipeline determinism/sharding + AdamW reference math."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

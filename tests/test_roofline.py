@@ -1,6 +1,6 @@
 """Roofline analysis over dry-run records (synthetic record fixtures)."""
 
-from repro.launch.roofline import (PEAK_FLOPS, RooflineRow, active_params,
+from repro.launch.roofline import (PEAK_FLOPS, active_params,
                                    analyze_record, model_flops)
 from repro.configs import get_config
 

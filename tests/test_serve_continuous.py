@@ -43,6 +43,32 @@ def test_pool_group_sizes_follow_sharing_levels():
     assert SlotPool(Category.MPI_THREADS, 3).group_size == 3
 
 
+LEVEL_GROUPS = {1: 1, 2: 2, 3: 4}      # level 4 -> all slots
+
+
+@pytest.mark.parametrize("category", list(Category))
+@pytest.mark.parametrize("n_slots", [1, 2, 3, 4, 5, 7, 8, 16])
+def test_pool_group_size_mapping_exhaustive(category, n_slots):
+    """Every Category.level x pool size: group size is the level's Fig. 4b
+    share width clamped to the pool."""
+    expect = LEVEL_GROUPS.get(category.level, n_slots)
+    assert SlotPool(category, n_slots).group_size == min(expect, n_slots)
+    # groups tile the pool exactly once
+    tiles = [i for g in SlotPool(category, n_slots).groups for i in g]
+    assert tiles == list(range(n_slots))
+
+
+def test_pool_admissible_empty_queue_short_circuits():
+    """With nothing waiting, admissible() answers [] immediately instead
+    of walking the groups (the engine would otherwise re-scan them every
+    decode step)."""
+    pool = SlotPool(Category.SHARED_DYNAMIC, 8)
+    assert pool.admissible([False] * 8, queue_len=0) == []
+    # and the answer is bounded by what is actually waiting
+    assert pool.admissible([False] * 8, queue_len=3) == [0, 1, 2]
+    assert pool.admissible([True] * 8, queue_len=3) == []
+
+
 def test_pool_dedicated_admits_any_free_slot():
     pool = SlotPool(Category.MPI_EVERYWHERE, 4)
     assert pool.admissible([True, False, True, False]) == [1, 3]
@@ -96,6 +122,25 @@ def test_mixed_lengths_admitted_mid_decode(served):
     assert eng.stats["decode_steps"] < 3 + 9 + 3
     for r in reqs:
         assert done[r.rid] == _solo(cfg, params, r)
+
+
+def test_same_step_admit_and_finish_frees_slot(served):
+    """A one-token request admitted and finished within the same decode
+    step still frees its slot for the next queued request — under both a
+    dedicated pool and the fully shared (group = pool) one."""
+    cfg, params = served
+    for cat in (Category.MPI_EVERYWHERE, Category.MPI_THREADS):
+        eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
+                               category=cat)
+        reqs = [Request(rid=i, prompt=_prompt(8, start=1 + i),
+                        max_new_tokens=1) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        done = {r.rid: r.output for r in eng.run()}
+        assert len(done) == 5 and eng.stats["prefills"] == 5
+        for r in reqs:
+            assert len(done[r.rid]) == 1
+            assert done[r.rid] == _solo(cfg, params, r)[:1]
 
 
 def test_budget_exhaustion_frees_slot(served):

@@ -1,7 +1,6 @@
 """Logical-axis sharding rules: divisibility fallback, batch specs, cache
 specs, layer planning (device-free — specs only)."""
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 

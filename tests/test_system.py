@@ -1,13 +1,11 @@
 """End-to-end behaviour: the full stack (data -> model -> endpoint-engine
 DDP step -> optimizer -> checkpoint -> serve) on a tiny config."""
 
-import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.endpoints import Category
 from repro.launch.mesh import make_mesh
-from repro.models.model import Model
 from repro.serve.engine import Request, ServeEngine
 from repro.train.loop import TrainConfig, Trainer
 

@@ -48,6 +48,17 @@ def make_trace(args):
                          seed=args.seed)
 
 
+def parse_buckets(spec: str):
+    """--prefill-buckets: 'auto'/'pow2' derive power-of-2 buckets,
+    'none'/'off' disable (exact-length prefill), else a comma list of
+    lengths, e.g. '8,16,32'."""
+    if spec in ("auto", "pow2"):
+        return spec
+    if spec in ("none", "off"):
+        return None
+    return tuple(int(tok) for tok in spec.split(",") if tok.strip())
+
+
 def run_fleet(cfg, params, args) -> None:
     category = Category(args.category)
     workers = [
@@ -55,7 +66,10 @@ def run_fleet(cfg, params, args) -> None:
             w,
             ContinuousEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len,
-                             use_ragged_kernel=args.ragged_kernel),
+                             use_ragged_kernel=args.ragged_kernel,
+                             decode_horizon=args.decode_horizon,
+                             prefill_buckets=parse_buckets(
+                                 args.prefill_buckets)),
             vocab=cfg.vocab)
         for w in range(args.workers)]
     router = Router(workers, category, placement=args.placement)
@@ -86,7 +100,10 @@ def run_single(cfg, params, args) -> None:
         engine = ContinuousEngine(cfg, params, n_slots=args.slots,
                                   max_len=args.max_len,
                                   category=Category(args.category),
-                                  use_ragged_kernel=args.ragged_kernel)
+                                  use_ragged_kernel=args.ragged_kernel,
+                                  decode_horizon=args.decode_horizon,
+                                  prefill_buckets=parse_buckets(
+                                      args.prefill_buckets))
     else:
         engine = ServeEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len)
@@ -109,10 +126,17 @@ def run_single(cfg, params, args) -> None:
           f"({n_tok / dt:.1f} tok/s, engine={args.engine}, "
           f"p50 latency {p50:.2f}s)")
     if args.engine == "continuous":
+        syncs = engine.stats["host_syncs"] / max(1, n_tok)
         print(f"slot pool: {engine.pool.category.value} "
               f"(group size {engine.pool.group_size}), "
               f"occupancy {engine.occupancy:.2f}, "
-              f"{engine.stats['decode_steps']} decode steps")
+              f"{engine.stats['decode_steps']} decode steps in "
+              f"{engine.stats['decode_calls']} calls "
+              f"(horizon {engine.decode_horizon}), "
+              f"{engine.stats['prefills']} prefills for "
+              f"{engine.stats['prefilled_requests']} requests "
+              f"(buckets {list(engine.prefill_buckets) or 'off'}), "
+              f"{syncs:.2f} host syncs/token")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.output}")
 
@@ -146,6 +170,13 @@ def main(argv=None):
     ap.add_argument("--ragged-kernel", action="store_true",
                     help="decode attention through the Pallas ragged "
                          "kernel (interpret mode off-TPU)")
+    ap.add_argument("--decode-horizon", type=int, default=1,
+                    help="fused decode steps per host sync (continuous "
+                         "engine; 1 = per-step host loop, the oracle)")
+    ap.add_argument("--prefill-buckets", default="auto",
+                    help="admission prefill length buckets: 'auto'/'pow2' "
+                         "(power-of-2 set), 'none' (exact-length), or a "
+                         "comma list like '8,16,32'")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -153,6 +184,14 @@ def main(argv=None):
         ap.error("--workers > 1 serves through continuous-engine workers; "
                  "--engine wave only applies to a single engine")
     args.engine = args.engine or "wave"
+    if args.workers == 1 and args.engine == "wave":
+        if args.decode_horizon != 1:
+            ap.error("--decode-horizon applies to the continuous engine")
+        if parse_buckets(args.prefill_buckets) not in ("auto", "pow2",
+                                                       None):
+            # 'auto' (the default) and 'none' are both no-ops for the
+            # wave engine; only an explicit bucket list is a misuse
+            ap.error("--prefill-buckets applies to the continuous engine")
     pmax = args.prompt_len * (2 if args.mixed_lengths else 1)
     if args.workers > 1 and pmax + args.max_new >= args.max_len:
         # fleet accounting needs every request to fit; the single-engine

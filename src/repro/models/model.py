@@ -100,7 +100,8 @@ class Model:
 
     def forward(self, params, batch, *, mode="train", cache=None,
                 shard_fn=lambda a, *n: a, remat=True,
-                skip_future=False, use_ragged_kernel=False):
+                skip_future=False, use_ragged_kernel=False,
+                decode_write_mask=None):
         """-> (hidden (B,S,d), new_cache, aux_loss)."""
         cfg = self.cfg
         x, pos = self._inputs(params, batch)
@@ -117,7 +118,9 @@ class Model:
                        decode_idx=(cache or {}).get("idx"),
                        window_cache=(cfg.attn_window > 0
                                      and cfg.sub_quadratic),
-                       ragged_kernel=use_ragged_kernel and mode == "decode")
+                       ragged_kernel=use_ragged_kernel and mode == "decode",
+                       decode_write_mask=(decode_write_mask
+                                          if mode == "decode" else None))
         stack_cache = None if cache is None else cache["stack"]
         h, new_stack, aux = apply_stack(params["decoder"], x, cfg, self.plan,
                                         ctx, cache=stack_cache, remat=remat)
@@ -155,6 +158,20 @@ class Model:
         return loss, metrics
 
     # ----- serving -------------------------------------------------------
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """True when trailing-pad bucketed prefill is exact: every block
+        is attention (causal masking makes padding invisible to earlier
+        positions) and no rolling-window cache (whose prefill keeps the
+        LAST ``window`` positions, which padding would pollute).
+        Recurrent blocks (rglru/mlstm/slstm) scan through pad tokens and
+        corrupt their state, so they prefill at exact length."""
+        from repro.models.transformer import ATTN_KINDS
+        cfg = self.cfg
+        descs = tuple(self.plan.prefix) + tuple(self.plan.period)
+        return (all(d.kind in ATTN_KINDS for d in descs)
+                and not (cfg.attn_window > 0 and cfg.sub_quadratic))
+
     def init_cache(self, batch_size: int, max_len: int,
                    enc_len: int = 0, per_slot: bool = False):
         """``per_slot`` makes ``idx`` a (B,) vector so every batch row
@@ -168,21 +185,32 @@ class Model:
         return {"stack": stack, "idx": idx}
 
     def prefill(self, params, batch, cache, shard_fn=lambda a, *n: a,
-                skip_future: bool = True):
+                skip_future: bool = True, last_index=None):
         """Run the prompt, fill the cache; -> (last_logits, cache).
         ``skip_future`` uses the triangular attention schedule (forward-
-        only; 2.8x compute on 32k prompts, EXPERIMENTS §Perf)."""
+        only; 2.8x compute on 32k prompts, EXPERIMENTS §Perf).
+
+        ``last_index`` ((B,) int32) gathers each row's logits at its own
+        last REAL token instead of position -1 — the bucketed-prefill path
+        pads ragged prompts up to a shared length bucket, and causal
+        attention makes trailing padding invisible to position
+        ``last_index[b]`` (bit-identical to an exact-length prefill)."""
         cfg = self.cfg
         h, new_cache, _ = self.forward(params, batch, mode="prefill",
                                        cache=cache, shard_fn=shard_fn,
                                        remat=False, skip_future=skip_future)
         head = head_matrix(params["embed"], cfg)
-        last = h[:, -1, :]
+        if last_index is None:
+            last = h[:, -1, :]
+        else:
+            b = h.shape[0]
+            last = h[jnp.arange(b), jnp.asarray(last_index, jnp.int32), :]
         logits = (last @ head.astype(last.dtype)).astype(jnp.float32)
         return logits, new_cache
 
     def decode_step(self, params, cache, tokens=None, embeds=None,
-                    shard_fn=lambda a, *n: a, use_ragged_kernel=False):
+                    shard_fn=lambda a, *n: a, use_ragged_kernel=False,
+                    write_mask=None):
         """One decode step.  tokens: (B,) i32 (or embeds (B,d)).
         -> (logits (B,V) fp32, new_cache).
 
@@ -194,7 +222,11 @@ class Model:
         (full-context layers, vector ``idx``) through the Pallas
         ``flash_decode_attention`` kernel — the TPU data path; interpret
         mode (bit-exact semantics) everywhere else.  Rolling-window layers
-        keep the jnp path, which stays the oracle either way."""
+        keep the jnp path, which stays the oracle either way.
+
+        ``write_mask`` ((B,) bool) gates attention cache writes per row:
+        the fused decode horizon passes the live-slot mask so finished
+        slots stop writing while the batch keeps stepping on device."""
         cfg = self.cfg
         idx = cache["idx"]
         if tokens is not None:
@@ -213,7 +245,74 @@ class Model:
         h, new_cache, _ = self.forward(params, batch, mode="decode",
                                        cache=cache, shard_fn=shard_fn,
                                        remat=False,
-                                       use_ragged_kernel=use_ragged_kernel)
+                                       use_ragged_kernel=use_ragged_kernel,
+                                       decode_write_mask=write_mask)
         head = head_matrix(params["embed"], cfg)
         logits = (h[:, 0, :] @ head.astype(h.dtype)).astype(jnp.float32)
         return logits, new_cache
+
+    def decode_horizon(self, params, cache, state, *, horizon: int,
+                       max_len: int, use_ragged_kernel=False):
+        """``horizon`` fused decode steps per host sync (greedy sampling).
+
+        The serving analogue of the paper's doorbell batching: instead of
+        one blocking device->host round-trip per generated token
+        (``jnp.argmax`` -> ``np.array`` -> per-slot host loop), argmax
+        sampling, budget decrement, EOS detection, and the finished mask
+        all run inside one on-device loop of up to ``horizon`` steps,
+        and the host drains the whole token trace in a single transfer.
+
+        ``state`` (all (B,)): ``tok`` i32 next token to feed,
+        ``remaining`` i32 decode budget, ``finished`` bool,
+        ``eos`` i32 / ``has_eos`` bool per-slot EOS ids.
+
+        -> (new_cache, new_state, trace) where every ``trace`` leaf is
+        (horizon, B): ``tok`` the token emitted at that step, ``live``
+        whether it counts, ``bonus_tok``/``bonus`` the extra cache-budget-
+        exhaustion token, ``retired`` whether the slot finished there.
+        Step semantics mirror the per-step host loop exactly
+        (``ContinuousEngine.step`` with horizon 1 is the oracle):
+        finished slots keep riding in the batch but feed a frozen token
+        and stop writing their cache rows (``write_mask``), and the loop
+        EXITS EARLY once every slot is finished (a ``while_loop``, so a
+        horizon never burns device steps on an all-drained pool; unvisited
+        trace rows stay all-dead)."""
+        assert self.cfg.input_mode == "tokens" and not self.cfg.is_encdec, \
+            "the fused horizon decodes token models"
+        eos, has_eos = state["eos"], state["has_eos"]
+        b = state["tok"].shape[0]
+        trace0 = {"tok": jnp.zeros((horizon, b), jnp.int32),
+                  "live": jnp.zeros((horizon, b), bool),
+                  "bonus_tok": jnp.zeros((horizon, b), jnp.int32),
+                  "bonus": jnp.zeros((horizon, b), bool),
+                  "retired": jnp.zeros((horizon, b), bool)}
+
+        def cond(carry):
+            s, _, _, _, finished, _ = carry
+            return (s < horizon) & ~finished.all()
+
+        def body(carry):
+            s, cache, tok, remaining, finished, trace = carry
+            live = ~finished
+            logits, cache = self.decode_step(
+                params, cache, tokens=tok, write_mask=live,
+                use_ragged_kernel=use_ragged_kernel)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            rem = jnp.where(live, remaining - 1, remaining)
+            fin_new = live & ((rem <= 0) | (has_eos & (nxt == eos)))
+            # cache idx advanced by decode_step; a live slot that would
+            # overrun the cache emits its lookahead token and retires
+            bonus = live & ~fin_new & (cache["idx"] >= max_len - 1)
+            finished = finished | fin_new | bonus
+            out = {"tok": tok, "live": live, "bonus_tok": nxt,
+                   "bonus": bonus, "retired": live & finished}
+            trace = {k: v.at[s].set(out[k]) for k, v in trace.items()}
+            return (s + 1, cache, jnp.where(live, nxt, tok), rem,
+                    finished, trace)
+
+        _, cache, tok, remaining, finished, trace = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), cache, state["tok"],
+                         state["remaining"], state["finished"], trace0))
+        new_state = dict(state, tok=tok, remaining=remaining,
+                         finished=finished)
+        return cache, new_state, trace

@@ -144,17 +144,23 @@ class BlockCtx:
     decode_idx: Any = None            # scalar int32 in decode/prefill-resume
     window_cache: bool = False        # rolling window KV cache
     ragged_kernel: bool = False       # per-slot decode via Pallas kernel
+    decode_write_mask: Any = None     # (B,) bool: rows allowed to write
 
 
-def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool):
+def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool,
+                      write_mask=None):
     idx = jnp.asarray(idx)
     if idx.ndim == 1:
         # per-slot write positions (continuous batching): batch row b lands
         # at idx[b]; rows whose index ran past the buffer end write nowhere
-        # (retired slots decoding into the masked void)
+        # (retired slots decoding into the masked void).  ``write_mask``
+        # additionally gates whole rows — the fused decode horizon passes
+        # the live-slot mask so finished slots stop writing mid-horizon.
         slot = idx % window if (rolling and window > 0) else idx
         smax = cache["k"].shape[1]
         hit = jnp.arange(smax)[None, :] == slot[:, None]     # (B, Smax)
+        if write_mask is not None:
+            hit &= write_mask[:, None]
         k = jnp.where(hit[..., None, None], k_new, cache["k"])
         v = jnp.where(hit[..., None, None], v_new, cache["v"])
         return {"k": k, "v": v}
@@ -205,7 +211,7 @@ def _self_attention(p, h, ctx: BlockCtx, window: int, cache):
     if ctx.mode == "decode":
         rolling = ctx.window_cache and window > 0
         new_kv = _attn_cache_write(cache, k, v, ctx.decode_idx, window,
-                                   rolling)
+                                   rolling, write_mask=ctx.decode_write_mask)
         if rolling:
             # every live slot holds one of the last `window` positions; only
             # not-yet-written slots (buffer not full) are invalid

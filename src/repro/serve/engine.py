@@ -15,6 +15,24 @@ slot for a queued request mid-decode.  The admission policy is a
 dedicated slot per request is MPI-everywhere, one shared wave is
 MPI+threads, and k-way-shared slot groups are the scalable middle.
 
+Two host-interaction batching layers sit on the continuous hot path
+(DESIGN.md §10 — the serving translation of the paper's doorbell
+batching and bounded-QP-set lessons):
+
+* **Fused decode horizon** (``decode_horizon=K``): token generation runs
+  on device for K steps per host sync (``Model.decode_horizon`` — argmax
+  sampling, budget decrement, EOS detection, and the finished mask fused
+  into one early-exiting ``lax.while_loop``), then the whole K-step
+  token trace drains in a single transfer.  ``K=1`` is the per-step host
+  loop, kept as the bit-exactness oracle.
+* **Bucketed batched prefill** (``prefill_buckets``): every admission of
+  a round pads to a shared power-of-2 length bucket and prefills as ONE
+  fixed-shape batched call + one fused multi-slot cache scatter, so jit
+  specializations are bounded by ``len(buckets)`` instead of one per
+  distinct prompt length.  Trailing padding is bit-invisible under causal
+  attention (``Model.prefill`` ``last_index``); models with recurrent
+  blocks or rolling-window caches fall back to exact-length prefill.
+
 Both engines drive the same jitted ``Model.decode_step`` the dry-run
 lowers, so serving exercises exactly the production path.
 """
@@ -25,7 +43,7 @@ import dataclasses
 import functools
 import time
 from collections import defaultdict, deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +72,6 @@ class ServeEngine:
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
             "the wave engine serves decoder-only token models"
         self.cfg = cfg
-        self.model = Model(cfg)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -62,10 +79,13 @@ class ServeEngine:
         self.done: List[Request] = []
         self.latency: Dict[int, float] = {}      # rid -> s from run() start
         self._t0 = 0.0
-        self._decode = jax.jit(
-            lambda p, c, t: self.model.decode_step(p, c, tokens=t))
-        self._prefill = jax.jit(
-            lambda p, b, c: self.model.prefill(p, b, c))
+        # shared executables: every wave engine (and every continuous
+        # engine) of one config reuses the same jitted decode/prefill
+        # instead of re-jitting per-instance lambdas (N-fold compile)
+        steps = _shared_steps(cfg, False)
+        self.model = steps.model
+        self._decode = steps.decode
+        self._prefill = steps.prefill
 
     def submit(self, req: Request):
         req.output = []
@@ -130,18 +150,66 @@ class ServeEngine:
         return self.done
 
 
+@dataclasses.dataclass(frozen=True)
+class SharedSteps:
+    """One set of jitted executables per (config, ragged-kernel) pair —
+    every engine of a fleet shares them instead of re-jitting identical
+    lambdas per worker (N-fold compile otherwise).  jit's own shape cache
+    bounds specializations: ``prefill_padded`` compiles once per length
+    bucket, ``horizon`` once per decode-horizon K."""
+
+    model: Model
+    decode: object            # (params, cache, tokens) -> (logits, cache)
+    prefill: object           # (params, batch, cache) -> (logits, cache)
+    merge: object             # scatter one batch-1 cache into a slot
+    admit_packed: object      # fused padded prefill + scatter + argmax
+    horizon: object           # (params, cache, state, K, max_len)
+
+
 @functools.lru_cache(maxsize=None)
-def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool):
-    """One (Model, jitted decode/prefill/merge) set per config — engines
-    of a fleet share executables instead of re-jitting identical
-    lambdas per worker (N-fold compile otherwise)."""
+def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool) -> SharedSteps:
     model = Model(cfg)
     decode = jax.jit(
         lambda p, c, t: model.decode_step(
             p, c, tokens=t, use_ragged_kernel=use_ragged_kernel))
     prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+
+    def admit_packed(p, full, state, toks, last_index, slot_ids, valid,
+                     lengths, remaining, eos, has_eos, max_len):
+        """One executable admits a whole round: padded batched prefill
+        (fresh cache allocated in-graph, each row's logits gathered at
+        its own last real token), fused multi-slot scatter into the live
+        cache, argmax of the first tokens, and the per-slot decode state
+        update — so admission costs one dispatch, never materializes the
+        intermediate cache, and (with a fused decode horizon) never
+        blocks: the state stays device-resident and the next horizon's
+        trace is the only host sync."""
+        logits, many = model.prefill(
+            p, {"tokens": toks}, model.init_cache(toks.shape[0], max_len),
+            last_index=last_index)
+        has, src = _slot_mapping(slot_ids, valid, full["idx"].shape[0])
+        cache = _scatter_slots(full, many, has, src, lengths)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        state = {
+            "tok": jnp.where(has, first[src], state["tok"]),
+            "remaining": jnp.where(has, remaining[src],
+                                   state["remaining"]),
+            "finished": state["finished"] & ~has,
+            "eos": jnp.where(has, eos[src], state["eos"]),
+            "has_eos": jnp.where(has, has_eos[src], state["has_eos"]),
+        }
+        return cache, state
+
     merge = jax.jit(_scatter_slot)
-    return model, decode, prefill, merge
+    admit_packed = jax.jit(admit_packed, static_argnums=(11,))
+    horizon = jax.jit(
+        lambda p, c, s, k, ml: model.decode_horizon(
+            p, c, s, horizon=k, max_len=ml,
+            use_ragged_kernel=use_ragged_kernel),
+        static_argnums=(3, 4))
+    return SharedSteps(model=model, decode=decode, prefill=prefill,
+                       merge=merge, admit_packed=admit_packed,
+                       horizon=horizon)
 
 
 def _scatter_slot(full, one, slot):
@@ -164,6 +232,59 @@ def _scatter_slot(full, one, slot):
     return {"stack": stack, "idx": full["idx"].at[slot].set(one["idx"])}
 
 
+def _slot_mapping(slot_ids, valid, n_slots):
+    """-> (has (n,) bool: slot receives a row; src (n,) i32: its source
+    row) from a round's row-major (slot_ids, valid) assignment."""
+    match = ((slot_ids[None, :] == jnp.arange(n_slots)[:, None])
+             & valid[None, :])
+    return match.any(axis=1), jnp.argmax(match, axis=1)
+
+
+def _scatter_slots(full, many, has, src, lengths):
+    """Fused multi-slot scatter: for every slot ``b`` with ``has[b]``,
+    row ``src[b]`` of the batched-prefill cache ``many`` lands in slot
+    ``b`` of ``full`` and that slot's position pins to
+    ``lengths[src[b]]``.  One executable replaces a round's per-request
+    merge chain."""
+    n = full["idx"].shape[0]
+
+    def upd(axis):
+        def f(dst, s):
+            g = jnp.take(s, src, axis=axis)
+            shape = [1] * dst.ndim
+            shape[axis] = n
+            return jnp.where(has.reshape(shape), g, dst)
+        return f
+
+    stack = {
+        "prefix": [jax.tree.map(upd(0), f, o)
+                   for f, o in zip(full["stack"]["prefix"],
+                                   many["stack"]["prefix"])],
+        "body": [jax.tree.map(upd(1), f, o)
+                 for f, o in zip(full["stack"]["body"],
+                                 many["stack"]["body"])],
+    }
+    idx = jnp.where(has, jnp.take(lengths, src).astype(full["idx"].dtype),
+                    full["idx"])
+    return {"stack": stack, "idx": idx}
+
+
+def pow2_buckets(max_len: int, lo: int = 8) -> Tuple[int, ...]:
+    """Power-of-2 prompt-length buckets covering [1, max_len): the
+    bounded set of prefill jit specializations (the serving analogue of
+    the paper's bounded QP set — a handful of shared resources instead of
+    one dedicated resource per distinct consumer)."""
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+Buckets = Union[None, str, Sequence[int]]
+
+
 class ContinuousEngine:
     """Continuous batching over an endpoint-style slot pool.
 
@@ -171,40 +292,101 @@ class ContinuousEngine:
     own ragged length; a finished request immediately frees its slot and
     the ``SlotPool`` decides when a queued request may take it (group
     fully drained — group size 1 admits instantly).  Prompt lengths need
-    not match across slots, so no wave grouping and no padding.
+    not match across slots, so no wave grouping and no padding at decode.
+
+    ``decode_horizon=K`` batches K decode steps per host sync (fused
+    on-device sampling; ``K=1`` is the per-step oracle) and
+    ``prefill_buckets`` batches a round's admissions into one padded
+    prefill (``None`` disables; ``"pow2"``/``"auto"`` derives power-of-2
+    buckets; a sequence of ints uses those lengths).  Both change WHEN
+    host work happens, never token values: outputs are bit-identical
+    across every (K, buckets) setting on eligible models.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 512,
                  category: Category = Category.MPI_EVERYWHERE,
                  pool: Optional[SlotPool] = None,
-                 use_ragged_kernel: bool = False):
+                 use_ragged_kernel: bool = False,
+                 decode_horizon: int = 1,
+                 prefill_buckets: Buckets = "auto"):
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
             "the continuous engine serves decoder-only token models"
+        if decode_horizon < 1:
+            raise ValueError(f"decode_horizon must be >= 1, "
+                             f"got {decode_horizon}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.pool = pool or SlotPool(category, n_slots)
         assert self.pool.n_slots == n_slots
+        self.decode_horizon = decode_horizon
         self.queue: deque = deque()
         self.done: List[Request] = []
         self.latency: Dict[int, float] = {}      # rid -> s from run() start
-        # decode_steps: jitted step calls; busy_slot_steps / slot_steps is
-        # the pool's occupancy (1.0 = every slot useful every step)
-        self.stats = {"decode_steps": 0, "slot_steps": 0,
-                      "busy_slot_steps": 0, "prefills": 0}
-        (self.model, self._decode, self._prefill,
-         self._merge) = _shared_steps(cfg, use_ragged_kernel)
+        # deterministic schedule keys (wall-clock free): the engine's
+        # token-step counter at admission/retirement, plus the order
+        # requests were bound into slots — invariant across horizons
+        self.admit_steps: Dict[int, int] = {}
+        self.retire_steps: Dict[int, int] = {}
+        self.admit_order: List[int] = []
+        # decode_steps: token steps; decode_calls: jitted executables
+        # dispatched; host_syncs: blocking device->host transfers;
+        # busy_slot_steps / slot_steps is the pool's occupancy
+        self.stats = {"decode_steps": 0, "decode_calls": 0,
+                      "slot_steps": 0, "busy_slot_steps": 0,
+                      "prefills": 0, "prefilled_requests": 0,
+                      "host_syncs": 0}
+        self._steps = _shared_steps(cfg, use_ragged_kernel)
+        self.model = self._steps.model
+        self._decode = self._steps.decode
+        self._prefill = self._steps.prefill
+        self._merge = self._steps.merge
+        self.prefill_buckets = self._resolve_buckets(prefill_buckets)
         self._t0 = 0.0
         self._started = False
         self._cache = None
+        self._step_no = 0
         # pre-start shape so free_slots()/admissible_slots() work before
         # start() (the cache itself is allocated lazily there)
         self._slot_req: List[Optional[Request]] = [None] * n_slots
         self._next_tok = None
         self._remaining = None
         self._pos = None
+        self._eos_id = None
+        self._has_eos = None
+        self._dev_state = None     # device-resident state (fused mode)
+
+    def _resolve_buckets(self, buckets: Buckets) -> Tuple[int, ...]:
+        """-> the active bucket set (empty tuple = exact-length prefill).
+        Auto modes quietly disable themselves on models where trailing
+        padding is not exact (recurrent blocks, rolling-window caches);
+        an explicit bucket list on such a model is an error."""
+        auto = isinstance(buckets, str)
+        if auto and buckets not in ("auto", "pow2"):
+            raise ValueError(f"unknown prefill_buckets mode {buckets!r}")
+        if not buckets:
+            return ()
+        if not self.model.supports_padded_prefill:
+            if auto:
+                return ()
+            raise ValueError(
+                f"{self.cfg.name}: bucketed prefill needs a pure-attention "
+                f"stack without rolling-window caches")
+        if auto:
+            return pow2_buckets(self.max_len)
+        out = tuple(sorted({min(int(b), self.max_len) for b in buckets}))
+        if not all(b > 0 for b in out):
+            raise ValueError(f"buckets must be positive, got {buckets}")
+        return out
+
+    def _bucket_of(self, length: int) -> int:
+        for b in self.prefill_buckets:
+            if b >= length:
+                return b
+        raise ValueError(f"prompt length {length} exceeds the largest "
+                         f"bucket {self.prefill_buckets[-1]}")
 
     def submit(self, req: Request):
         req.output = []
@@ -215,22 +397,110 @@ class ContinuousEngine:
         self.queue.append(req)
 
     # ----- slot lifecycle -------------------------------------------------
+    def _bind(self, slot: int, req: Request,
+              first_tok: Optional[int] = None):
+        """Host bookkeeping shared by both admission paths.  ``first_tok``
+        is None in fused-horizon mode: the decode state lives on device
+        and the first token surfaces through the next horizon's trace."""
+        self._slot_req[slot] = req
+        if first_tok is not None:
+            self._next_tok[slot] = first_tok
+        self._remaining[slot] = req.max_new_tokens
+        self._pos[slot] = len(req.prompt)
+        self._eos_id[slot] = -1 if req.eos_id is None else req.eos_id
+        self._has_eos[slot] = req.eos_id is not None
+        self.admit_order.append(req.rid)
+        self.admit_steps[req.rid] = self._step_no
+
     def _admit(self, cache, slot: int, req: Request):
-        """Prefill ``req`` alone and scatter its cache into ``slot``."""
+        """Prefill ``req`` alone and scatter its cache into ``slot`` (the
+        exact-length path: one jit specialization per prompt length)."""
         prompt = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
         one = self.model.init_cache(1, self.max_len)
         logits, one = self._prefill(self.params, {"tokens": prompt}, one)
         cache = self._merge(cache, one, jnp.asarray(slot, jnp.int32))
-        self._slot_req[slot] = req
-        self._next_tok[slot] = int(jnp.argmax(logits, -1)[0])
-        self._remaining[slot] = req.max_new_tokens
-        self._pos[slot] = len(req.prompt)
+        first = int(jnp.argmax(logits, -1)[0])
+        self._bind(slot, req, first)
+        if self._dev_state is not None:
+            s = self._dev_state
+            self._dev_state = {
+                "tok": s["tok"].at[slot].set(first),
+                "remaining": s["remaining"].at[slot].set(
+                    req.max_new_tokens),
+                "finished": s["finished"].at[slot].set(False),
+                "eos": s["eos"].at[slot].set(self._eos_id[slot]),
+                "has_eos": s["has_eos"].at[slot].set(
+                    bool(self._has_eos[slot])),
+            }
         self.stats["prefills"] += 1
+        self.stats["prefilled_requests"] += 1
+        self.stats["host_syncs"] += 1
+        return cache
+
+    def _host_state(self):
+        """Decode state assembled from the host mirrors (horizon-1 mode,
+        where the mirrors are authoritative)."""
+        return {
+            "tok": jnp.asarray(self._next_tok),
+            "remaining": jnp.asarray(self._remaining),
+            "finished": jnp.asarray(
+                np.array([r is None for r in self._slot_req])),
+            "eos": jnp.asarray(self._eos_id),
+            "has_eos": jnp.asarray(self._has_eos),
+        }
+
+    def _admit_batch(self, cache, batch: List[Tuple[int, Request]]):
+        """Admit a whole round at once: every prompt pads to the round's
+        length bucket, ONE fixed-(n_slots)-row batched prefill runs, and
+        one fused scatter + state update lands every row in its slot.
+        Row and length padding are bit-invisible (independent batch rows;
+        causal attention), so outputs match the exact-length path while
+        jit specializations stay bounded by ``len(prefill_buckets)``.
+        In fused-horizon mode the round is fire-and-forget (no sync)."""
+        n = self.n_slots
+        bucket = self._bucket_of(max(len(r.prompt) for _, r in batch))
+        toks = np.zeros((n, bucket), np.int32)
+        last = np.zeros((n,), np.int32)
+        slot_ids = np.zeros((n,), np.int32)
+        valid = np.zeros((n,), bool)
+        lengths = np.zeros((n,), np.int32)
+        remaining = np.zeros((n,), np.int32)
+        eos = np.full((n,), -1, np.int32)
+        has_eos = np.zeros((n,), bool)
+        for j, (slot, req) in enumerate(batch):
+            ln = len(req.prompt)
+            toks[j, :ln] = req.prompt
+            last[j] = ln - 1
+            slot_ids[j] = slot
+            valid[j] = True
+            lengths[j] = ln
+            remaining[j] = req.max_new_tokens
+            eos[j] = -1 if req.eos_id is None else req.eos_id
+            has_eos[j] = req.eos_id is not None
+        fused = self._dev_state is not None
+        state = self._dev_state if fused else self._host_state()
+        cache, state = self._steps.admit_packed(
+            self.params, cache, state, jnp.asarray(toks),
+            jnp.asarray(last), jnp.asarray(slot_ids), jnp.asarray(valid),
+            jnp.asarray(lengths), jnp.asarray(remaining),
+            jnp.asarray(eos), jnp.asarray(has_eos), self.max_len)
+        if fused:
+            self._dev_state = state
+            for slot, req in batch:
+                self._bind(slot, req)
+        else:
+            first = np.asarray(state["tok"])              # one sync
+            for j, (slot, req) in enumerate(batch):
+                self._bind(slot, req, int(first[slot_ids[j]]))
+            self.stats["host_syncs"] += 1
+        self.stats["prefills"] += 1
+        self.stats["prefilled_requests"] += len(batch)
         return cache
 
     def _retire(self, slot: int):
         req = self._slot_req[slot]
         self.latency[req.rid] = time.perf_counter() - self._t0
+        self.retire_steps[req.rid] = self._step_no
         self.done.append(req)
         self._slot_req[slot] = None
 
@@ -249,8 +519,20 @@ class ContinuousEngine:
         self._cache = self.model.init_cache(b, self.max_len, per_slot=True)
         self._slot_req = [None] * b
         self._next_tok = np.zeros(b, np.int32)
-        self._remaining = np.zeros(b, np.int64)
+        self._remaining = np.zeros(b, np.int32)
         self._pos = np.zeros(b, np.int64)
+        self._eos_id = np.full(b, -1, np.int32)
+        self._has_eos = np.zeros(b, bool)
+        if self.decode_horizon > 1:
+            # fused mode: the decode state lives on device between
+            # horizons; every slot starts drained
+            self._dev_state = {
+                "tok": jnp.zeros(b, jnp.int32),
+                "remaining": jnp.zeros(b, jnp.int32),
+                "finished": jnp.ones(b, bool),
+                "eos": jnp.full(b, -1, jnp.int32),
+                "has_eos": jnp.zeros(b, bool),
+            }
         self._started = True
 
     @property
@@ -275,29 +557,50 @@ class ContinuousEngine:
 
     def admit_waiting(self) -> int:
         """Admit queued requests into every admissible slot; -> count.
-        Starts the engine if the caller has not (start() is idempotent)."""
+        Starts the engine if the caller has not (start() is idempotent).
+        With buckets active the whole round admits as one batched
+        prefill; prompts longer than the largest bucket fall back to the
+        exact-length path."""
         self.start()
-        n = 0
+        batch: List[Tuple[int, Request]] = []
         for slot in self.admissible_slots():
             if not self.queue:
                 break
-            self._cache = self._admit(self._cache, slot,
-                                      self.queue.popleft())
-            n += 1
-        return n
+            batch.append((slot, self.queue.popleft()))
+        if not batch:
+            return 0
+        if self.prefill_buckets:
+            cap = self.prefill_buckets[-1]
+            fit = [(s, r) for s, r in batch if len(r.prompt) <= cap]
+            if fit:
+                self._cache = self._admit_batch(self._cache, fit)
+            for slot, req in batch:
+                if len(req.prompt) > cap:
+                    self._cache = self._admit(self._cache, slot, req)
+        else:
+            for slot, req in batch:
+                self._cache = self._admit(self._cache, slot, req)
+        return len(batch)
 
     def step(self) -> List[Request]:
-        """One decode step over every live slot; -> requests retired by
-        this step (possibly admitted this very step: a request whose
-        budget is one token frees its slot again immediately)."""
+        """Decode ``decode_horizon`` steps over every live slot; ->
+        requests retired (possibly admitted this very call: a request
+        whose budget is one token frees its slot again immediately).
+        Horizon 1 is the per-step host loop — the oracle the fused path
+        is tested bit-identical against."""
+        if self.decode_horizon > 1:
+            return self._step_fused()
         active = [i for i, r in enumerate(self._slot_req) if r is not None]
         if not active:
             return []
         logits, self._cache = self._decode(self.params, self._cache,
                                            jnp.asarray(self._next_tok))
         self.stats["decode_steps"] += 1
+        self.stats["decode_calls"] += 1
+        self.stats["host_syncs"] += 1
         self.stats["slot_steps"] += self.n_slots
         self.stats["busy_slot_steps"] += len(active)
+        self._step_no += 1
         produced = self._next_tok.copy()
         # np.array (copy): admission writes the prefill token in-place
         nxt = np.array(jnp.argmax(logits, -1), np.int32)
@@ -317,6 +620,42 @@ class ContinuousEngine:
                 self._retire(i)
                 retired.append(r)
         self._next_tok = nxt
+        return retired
+
+    def _step_fused(self) -> List[Request]:
+        """One fused horizon: K decode steps on device, one host drain.
+        The carry state never leaves the device — the trace transfer is
+        the horizon's single host sync (the batched doorbell)."""
+        if self.n_active == 0:
+            return []
+        k = self.decode_horizon
+        self._cache, self._dev_state, trace = self._steps.horizon(
+            self.params, self._cache, self._dev_state, k, self.max_len)
+        # ONE blocking transfer drains the whole K-step token trace
+        trace = jax.device_get(trace)
+        # the horizon exits early once every slot drains, so the executed
+        # step count comes from the trace, not from K
+        executed = int(trace["live"].any(axis=1).sum())
+        self.stats["decode_steps"] += executed
+        self.stats["decode_calls"] += 1
+        self.stats["host_syncs"] += 1
+        self.stats["slot_steps"] += executed * self.n_slots
+        retired: List[Request] = []
+        for s in range(k):
+            row_live = trace["live"][s]
+            if not row_live.any():
+                break     # liveness is monotone within a horizon
+            self._step_no += 1
+            self.stats["busy_slot_steps"] += int(row_live.sum())
+            for i in np.nonzero(row_live)[0]:
+                r = self._slot_req[i]
+                r.output.append(int(trace["tok"][s, i]))
+                if trace["bonus"][s, i]:
+                    r.output.append(int(trace["bonus_tok"][s, i]))
+                if trace["retired"][s, i]:
+                    self._retire(i)
+                    retired.append(r)
+        self._pos += executed    # every row's cache index advanced as one
         return retired
 
     # ----- main loop ------------------------------------------------------

@@ -176,17 +176,23 @@ class EngineWorker:
 
     def step(self, t_ns: float):
         self.engine.admit_waiting()
-        n_live = self.engine.n_active
-        if n_live == 0:
+        if self.engine.n_active == 0:
             return 0.0, []
+        # one external step may execute K fused decode steps (the engine's
+        # decode horizon); virtual time accounts every one of them, so
+        # read the engine's own counters instead of assuming one step
+        before = (self.engine.stats["decode_steps"],
+                  self.engine.stats["busy_slot_steps"])
         retired = self.engine.step()
-        cost = (self.costs.t_step_base_ns
-                + n_live * self.costs.t_step_per_slot_ns)
+        d_steps = self.engine.stats["decode_steps"] - before[0]
+        d_busy = self.engine.stats["busy_slot_steps"] - before[1]
+        cost = (d_steps * self.costs.t_step_base_ns
+                + d_busy * self.costs.t_step_per_slot_ns)
         t_end = t_ns + cost
-        self.stats["steps"] += 1
-        self.stats["slot_steps"] += self.n_slots
-        self.stats["busy_slot_steps"] += n_live
-        self.stats["tokens"] += n_live
+        self.stats["steps"] += d_steps
+        self.stats["slot_steps"] += d_steps * self.n_slots
+        self.stats["busy_slot_steps"] += d_busy
+        self.stats["tokens"] += d_busy
         done = [Completion(rid=r.rid, worker=self.wid, t_done_ns=t_end,
                            new_tokens=len(r.output), output=list(r.output))
                 for r in retired]

@@ -18,6 +18,7 @@ neighbours' stragglers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence
 
 from repro.core.endpoints import (Category, EndpointModel,
@@ -45,12 +46,17 @@ class SlotPool:
     category: Category
     n_slots: int
 
-    @property
+    # cached_property writes straight into the instance __dict__, which
+    # sidesteps the frozen dataclass' __setattr__ guard — the pool stays
+    # immutable to callers while ``groups`` (walked every admissible()
+    # call, i.e. every engine step) is computed once per pool instead of
+    # rebuilt as a fresh list-of-ranges each time
+    @functools.cached_property
     def group_size(self) -> int:
         return min(group_size_for(self.category, self.n_slots),
                    self.n_slots)
 
-    @property
+    @functools.cached_property
     def groups(self) -> List[range]:
         g = self.group_size
         return [range(lo, min(lo + g, self.n_slots))

@@ -98,7 +98,7 @@ def test_slot_reuse_after_eos(served):
     for r in reqs:
         eng.submit(r)
     done = {r.rid: r.output for r in eng.run()}
-    assert len(done) == 3 and eng.stats["prefills"] == 3
+    assert len(done) == 3 and eng.stats["prefilled_requests"] == 3
     assert len(done[0]) < len(probe) and done[0] == probe[:len(done[0])]
     for r in reqs[1:]:
         assert done[r.rid] == _solo(cfg, params, r)
@@ -137,7 +137,11 @@ def test_same_step_admit_and_finish_frees_slot(served):
         for r in reqs:
             eng.submit(r)
         done = {r.rid: r.output for r in eng.run()}
-        assert len(done) == 5 and eng.stats["prefills"] == 5
+        # bucketed admission batches a round's prefills into one call, so
+        # the CALL count is below the request count while every request
+        # still prefills exactly once
+        assert len(done) == 5 and eng.stats["prefilled_requests"] == 5
+        assert eng.stats["prefills"] <= 5
         for r in reqs:
             assert len(done[r.rid]) == 1
             assert done[r.rid] == _solo(cfg, params, r)[:1]

@@ -99,10 +99,11 @@ def category_rows(args, rows):
     for cat in CATEGORIES:
         eng, total, dt, p50, p99 = _drive(
             lambda c=cat: ContinuousEngine(cfg, params, n_slots=args.slots,
-                                           max_len=args.max_len, category=c),
+                                           max_len=args.max_len,
+                                           slot_level=c.level),
             lambda: make_requests(cfg, args.requests))
         tps = total / dt
-        usage = SlotPool(cat, args.slots).endpoint_usage()
+        usage = SlotPool(cat.level, args.slots).endpoint_usage()
         syncs = _sync_stats(eng, total)
         row(f"serve_continuous_{cat.value}", 1e6 * dt / total,
             f"{tps:.1f}tok/s|p50={p50 * 1e3:.0f}ms|p99={p99 * 1e3:.0f}ms"

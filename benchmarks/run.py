@@ -17,6 +17,7 @@ BENCHES = [
     "bench_endpoint_collectives",
     "bench_serve_continuous",
     "bench_fabric",
+    "bench_plan_space",
     "roofline",
 ]
 

@@ -8,8 +8,8 @@ import tempfile
 
 import numpy as np
 
+from repro import serve
 from repro.configs import get_smoke_config
-from repro.serve.engine import Request, ServeEngine
 from repro.train.loop import TrainConfig, Trainer
 
 
@@ -24,13 +24,16 @@ def main():
         logs = trainer.train()
         print("loss curve:", [round(m["loss"], 3) for m in logs])
 
-        engine = ServeEngine(cfg, trainer.params, n_slots=2, max_len=96)
+        # one facade for all serving (DESIGN.md §11): connect with a
+        # plan preset and generate from the trained weights
+        client = serve.connect(cfg, "mpi_everywhere",
+                               params=trainer.params, n_slots=2,
+                               max_len=96)
         # the synthetic data follows tok_{t+1} = a*tok_t + ... — a trained
         # model should continue a ramp
         prompt = (np.arange(1, 17) * 3 % cfg.vocab).astype(np.int32)
-        engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
-        out = engine.run()[0]
-        print("prompt tail:", prompt[-4:].tolist(), "->", out.output)
+        [tokens] = client.generate([prompt], max_new_tokens=8)
+        print("prompt tail:", prompt[-4:].tolist(), "->", tokens)
 
 
 if __name__ == "__main__":

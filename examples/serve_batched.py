@@ -1,6 +1,7 @@
-"""End-to-end serving driver: the same mixed-length request set through the
-wave engine and through continuous batching at each slot-pool category, so
-the endpoint-category tradeoff (DESIGN.md §3) is visible from one command:
+"""End-to-end serving driver over the `serve.connect` facade: the same
+mixed-length request set through the wave executor and through continuous
+batching at each slot-sharing preset, so the endpoint-category tradeoff
+(DESIGN.md §3, §11) is visible from one command:
 
   PYTHONPATH=src python examples/serve_batched.py [--arch qwen2-0.5b]
 """
@@ -11,31 +12,31 @@ import time
 import jax
 import numpy as np
 
+from repro import serve
 from repro.configs import ARCHS, get_smoke_config
-from repro.core.endpoints import Category
 from repro.models.model import Model
-from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
 
 def make_requests(cfg, n, seed=0):
+    """(prompt, max_new_tokens, eos_id) triples, mixed lengths."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i, ln in enumerate(rng.choice([8, 16, 32], size=n)):
-        reqs.append(Request(
-            rid=i, prompt=rng.integers(1, cfg.vocab, ln).astype(np.int32),
-            max_new_tokens=int(rng.integers(4, 12)),
-            eos_id=int(rng.integers(0, cfg.vocab)) if i % 3 == 0 else None))
+        reqs.append((
+            rng.integers(1, cfg.vocab, ln).astype(np.int32),
+            int(rng.integers(4, 12)),
+            int(rng.integers(0, cfg.vocab)) if i % 3 == 0 else None))
     return reqs
 
 
-def drive(engine, reqs):
-    for r in reqs:
-        engine.submit(r)
+def drive(client, reqs):
+    rids = [client.submit(p, max_new_tokens=m, eos_id=e)
+            for p, m, e in reqs]
     t0 = time.time()
-    done = engine.run()
+    out = client.run()
     dt = time.time() - t0
-    total = sum(len(r.output) for r in done)
-    return done, total, dt
+    total = sum(len(out[r]) for r in rids)
+    return {r: out[r] for r in rids}, total, dt
 
 
 def main():
@@ -50,27 +51,27 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    done, total, dt = drive(ServeEngine(cfg, params, n_slots=args.slots,
-                                        max_len=160),
-                            make_requests(cfg, args.requests))
+    wave = serve.connect(cfg, None, params=params, executor="wave",
+                         n_slots=args.slots, max_len=160)
+    done, total, dt = drive(wave, make_requests(cfg, args.requests))
     print(f"wave           : {len(done)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots)")
-    baseline = {r.rid: r.output for r in done}
+    baseline = done
 
-    for cat in (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
-                Category.MPI_THREADS):
-        eng = ContinuousEngine(cfg, params, n_slots=args.slots,
-                               max_len=160, category=cat)
-        done, total, dt = drive(eng, make_requests(cfg, args.requests))
-        agree = sum(baseline[r.rid] == r.output for r in done)
-        print(f"{cat.value:15s}: {len(done)} requests / {total} tokens "
+    for preset in ("mpi_everywhere", "shared_dynamic", "mpi_threads"):
+        client = serve.connect(cfg, preset, params=params,
+                               n_slots=args.slots, max_len=160)
+        done, total, dt = drive(client,
+                                make_requests(cfg, args.requests))
+        agree = sum(baseline[r] == toks for r, toks in done.items())
+        eng = client.engine
+        print(f"{preset:15s}: {len(done)} requests / {total} tokens "
               f"in {dt:.2f}s ({total / dt:.1f} tok/s, "
               f"group {eng.pool.group_size}, occupancy "
               f"{eng.occupancy:.2f}, {agree}/{len(done)} match wave)")
 
-    for r in sorted(done, key=lambda r: r.rid)[:6]:
-        print(f"  req {r.rid:2d} prompt={len(r.prompt):2d}tok -> "
-              f"{len(r.output)} new: {r.output[:8]}")
+    for rid in sorted(done)[:6]:
+        print(f"  req {rid:2d} -> {len(done[rid])} new: {done[rid][:8]}")
 
 
 if __name__ == "__main__":

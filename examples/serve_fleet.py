@@ -1,42 +1,82 @@
-"""Serving-fabric tour: one traffic burst, every dispatch category.
+"""Plan-space fleet tour (DESIGN.md §9, §11): one traffic burst, every
+diagonal — and the off-diagonal plans no `Category` could name.
 
-Runs the canonical deterministic bursty trace through an 8-worker
-virtual-time fleet at each endpoint category and prints the paper's
-tradeoff at fleet scale: dedicated queues win the tail, the k-way-shared
-middle keeps >= 0.9x the throughput at a fraction of the endpoint
-footprint, the single shared funnel pays whole-fleet lock serialization.
+Part 1 runs the canonical deterministic bursty trace through an 8-worker
+virtual-time fleet at each diagonal sharing level, then at off-diagonal
+`SharingVector`s (dedicated slots + k-way-shared channels): the paper's
+tradeoff at fleet scale, with the off-diagonal matching the dedicated
+diagonal's throughput at a fraction of the footprint.
+
+Part 2 serves REAL tokens through the one facade: `serve.connect` with an
+off-diagonal plan drives a fleet of continuous-batching engine workers,
+with an ordered `Stream` (per-stream FIFO) riding along.
 
   PYTHONPATH=src python examples/serve_fleet.py
 """
 
-from repro.core.endpoints import Category
+import numpy as np
+
+from repro import serve
+from repro.configs import get_smoke_config
+from repro.core.plan import SharingVector
 from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
 
-CATEGORIES = (Category.MPI_EVERYWHERE, Category.SHARED_DYNAMIC,
-              Category.STATIC, Category.MPI_THREADS)
+VECTORS = (
+    SharingVector.diagonal(1),              # the old Category diagonal...
+    SharingVector.diagonal(2),
+    SharingVector.diagonal(3),
+    SharingVector.diagonal(4),
+    SharingVector(slots=1, channels=3, execs=4),   # ...and beyond it
+    SharingVector(slots=2, channels=4, execs=4),
+)
 
 
 def main():
     trace = canonical_bursty_trace()
     print(f"trace: {len(trace)} requests in bursts of 24, 8 workers x 4 "
           "slots\n")
-    print(f"{'category':16s} {'queues':>6s} {'tok/s':>9s} {'p50ms':>7s} "
-          f"{'p99ms':>7s} {'occ':>5s} {'lockwait':>9s} {'uuar%':>6s}")
-    base = None
-    for cat in CATEGORIES:
-        router = build_sim_fleet(8, cat)
+    print(f"{'plan (slots/chan/exec)':22s} {'queues':>6s} {'tok/s':>9s} "
+          f"{'p50ms':>7s} {'p99ms':>7s} {'occ':>5s} {'foot%':>6s}")
+    for v in VECTORS:
+        router = build_sim_fleet(8, v)
         rep = router.run(trace)
-        base = base or rep
-        print(f"{cat.value:16s} {router.plan.n_queues:6d} "
+        tag = f"L{v.slots}/L{v.channels}/L{v.execs}" + \
+            ("" if v.is_diagonal else "  (off-diag)")
+        print(f"{tag:22s} {router.plan.n_queues:6d} "
               f"{rep.tok_per_s:9,.0f} "
               f"{rep.latency_percentile(0.5) / 1e6:7.2f} "
               f"{rep.latency_percentile(0.99) / 1e6:7.2f} "
-              f"{rep.occupancy:5.2f} {rep.lock_wait_ns:8.0f}n "
-              f"{rep.endpoint_usage['uuars'] * 100:5.1f}%")
-    print("\nthe fleet-scale tradeoff: sharing the dispatch queues "
-          "collapses the endpoint footprint while throughput stays within "
-          "a few percent; only the tail latency pays, monotonically in "
-          "the sharing level.")
+              f"{rep.occupancy:5.2f} "
+              f"{v.footprint_score(8, 4) * 100:5.1f}%")
+    print("\nthe plan-space tradeoff: the off-diagonal points keep the "
+          "dedicated diagonal's throughput at the shared diagonal's "
+          "footprint — the paper's per-resource sharing result, "
+          "unreachable while one scalar category drove every layer.\n")
+
+    # ----- real tokens through the one facade ----------------------------
+    cfg = get_smoke_config("qwen2-0.5b")
+    client = serve.connect(
+        cfg, SharingVector(slots=1, channels=3, execs=4),
+        n_workers=4, n_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(9):
+        client.submit(rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                      max_new_tokens=4, at_ns=float(i))
+    s = client.stream()                     # an ordered lane rides along
+    chained = [s.submit(rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                        max_new_tokens=3) for _ in range(3)]
+    out = client.run()
+    rep = client.report
+    print(f"real fleet via {client!r}:")
+    print(f"  {rep.n_completed} requests, {rep.total_new_tokens} real "
+          f"tokens, {rep.tok_per_s:,.0f} virtual tok/s, "
+          f"fairness {rep.fairness:.2f}")
+    done_at = {c.rid: c.t_done_ns for c in rep.completions}
+    print(f"  stream FIFO held: "
+          f"{[round(done_at[r] / 1e3) for r in chained]} us completion "
+          f"times, outputs {s.outputs}")
+    print(f"  sample outputs: "
+          f"{[out[r] for r in sorted(out)][:3]}")
 
 
 if __name__ == "__main__":

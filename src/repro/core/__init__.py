@@ -9,12 +9,18 @@ scheduling (channels.py).
 
 from repro.core.endpoints import (Category, EndpointModel, ThreadPath,
                                   build_cq_shared, build_ctx_shared,
-                                  build_qp_shared, paper_categories)
+                                  build_qp_shared, category_for_level,
+                                  level_group_size, paper_categories,
+                                  sharing_group_size)
+from repro.core.plan import (EndpointPlan, Hints, PRESETS, SharingVector,
+                             as_plan, resolve)
 from repro.core.resources import (ResourceUsage, TDSharing,
                                   naive_td_per_ctx_usage)
 
 __all__ = [
-    "Category", "EndpointModel", "ThreadPath", "ResourceUsage", "TDSharing",
+    "Category", "EndpointModel", "EndpointPlan", "Hints", "PRESETS",
+    "ResourceUsage", "SharingVector", "TDSharing", "ThreadPath", "as_plan",
     "build_cq_shared", "build_ctx_shared", "build_qp_shared",
-    "naive_td_per_ctx_usage", "paper_categories",
+    "category_for_level", "level_group_size", "naive_td_per_ctx_usage",
+    "paper_categories", "resolve", "sharing_group_size",
 ]

@@ -22,7 +22,7 @@ import dataclasses
 import math
 
 from repro.core.endpoints import (Category, EndpointModel,
-                                  sharing_group_size)
+                                  category_for_level, level_group_size)
 
 # Default number of channel "lanes", mirroring the paper's 16-thread socket.
 DEFAULT_LANES = 16
@@ -76,21 +76,43 @@ class DispatchPlan:
     endpoint: a dedicated queue per worker is MPI everywhere (peak
     independence, peak footprint), one global queue funnelling every
     worker is MPI+threads, and k-way-shared queue groups — ``group_size``
-    workers draining one queue — are the scalable middle.  The group size
-    comes from ``Category.level`` via ``sharing_group_size`` so the fleet,
-    the slot pools, and the endpoint model stay one abstraction.
+    workers draining one queue — are the scalable middle.  Since the plan
+    redesign (DESIGN.md §11) the plan is keyed by a bare Fig. 4b sharing
+    **level** — the ``channels`` axis of a ``core.plan.SharingVector`` —
+    via the same ``level_group_size`` that sizes the slot pools, so the
+    fleet, the pools, and the endpoint model stay one abstraction; a
+    ``Category`` is still accepted and collapses to its level.
     """
 
-    category: Category
+    level: object                     # int sharing level (Category ok)
     n_workers: int
+    # the exact category the plan was built from, so endpoint_usage()
+    # keeps pricing e.g. DYNAMIC's own Table-1 numbers, not the
+    # canonical level-1 category's; excluded from equality (plans
+    # compare by their sharing structure) but a real field so
+    # dataclasses.replace preserves it
+    source_category: object = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def __post_init__(self):
+        if isinstance(self.level, Category):
+            object.__setattr__(self, "source_category", self.level)
+            object.__setattr__(self, "level", self.level.level)
+        if not 1 <= self.level <= 4:
+            raise ValueError(f"sharing level must be 1..4, "
+                             f"got {self.level!r}")
         if self.n_workers < 1:
             raise ValueError("a fleet needs at least one worker")
 
     @property
+    def category(self) -> Category:
+        """The category this plan was built from, else the canonical
+        diagonal ``Category`` at its level."""
+        return self.source_category or category_for_level(self.level)
+
+    @property
     def group_size(self) -> int:
-        return sharing_group_size(self.category, self.n_workers)
+        return level_group_size(self.level, self.n_workers)
 
     @property
     def n_queues(self) -> int:

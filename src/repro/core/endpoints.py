@@ -42,7 +42,7 @@ class Category(enum.Enum):
         }[self]
 
 
-def sharing_group_size(category: Category, n: int) -> int:
+def level_group_size(level: int, n: int) -> int:
     """Sharing level (Fig. 4b) -> size of the group of ``n`` consumers that
     share one resource path:
 
@@ -51,11 +51,38 @@ def sharing_group_size(category: Category, n: int) -> int:
     level 3 (static uUAR sharing)  -> 4 per group (the 4 static uUARs)
     level 4 (one shared QP)        -> one group of all ``n``
 
-    This single mapping drives both the serving slot pools
-    (``serve.slots.SlotPool``) and the fleet dispatch plans
-    (``core.channels.DispatchPlan``), so every layer of the system shares
-    one notion of "k-way shared"."""
-    return min({1: 1, 2: 2, 3: 4, 4: n}[category.level], max(1, n))
+    This single mapping drives the serving slot pools
+    (``serve.slots.SlotPool``), the fleet dispatch plans
+    (``core.channels.DispatchPlan``), and the per-resource sharing vectors
+    (``core.plan.SharingVector``), so every layer of the system shares one
+    notion of "k-way shared"."""
+    return min({1: 1, 2: 2, 3: 4, 4: n}[level], max(1, n))
+
+
+def sharing_group_size(category: Category, n: int) -> int:
+    """``level_group_size`` keyed by a category's dominant level."""
+    return level_group_size(category.level, n)
+
+
+# The canonical category sitting at each sharing level of Fig. 4b — the
+# diagonal of the per-resource plan space (``core.plan``).  Levels 1 has
+# three categories (MPI everywhere / 2xDynamic / Dynamic differ in HOW the
+# dedicated path is built, not in who shares it); the canonical pick is the
+# one whose name the serving layers have used since PR 1.
+CANONICAL_LEVEL_CATEGORY = {
+    1: Category.MPI_EVERYWHERE,
+    2: Category.SHARED_DYNAMIC,
+    3: Category.STATIC,
+    4: Category.MPI_THREADS,
+}
+
+
+def category_for_level(level: int) -> Category:
+    """The canonical ``Category`` at a Fig. 4b sharing level."""
+    try:
+        return CANONICAL_LEVEL_CATEGORY[level]
+    except KeyError:
+        raise ValueError(f"sharing level must be 1..4, got {level!r}")
 
 
 @dataclasses.dataclass(frozen=True)

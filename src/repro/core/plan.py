@@ -1,0 +1,346 @@
+"""Endpoint plans: per-resource sharing vectors, hints, and presets.
+
+The paper's winning configuration shares *different resource types at
+different levels* — dedicated QPs, k-way-shared CQs, fully shared PD/MR —
+yet a single ``Category`` can only express the diagonal of that space (one
+scalar level threaded uniformly through every resource).  This module is
+the serving-side generalization, following the authors' follow-up argument
+("How I Learned to Stop Worrying About User-Visible Endpoints and Love
+MPI"; "MPIX Stream") that callers should declare *intent* and let the
+implementation resolve resources:
+
+* ``SharingVector`` — independent Fig. 4b sharing levels per serving
+  resource type: decode **slots** (the QP analogue), dispatch **channels**
+  (the CQ analogue), and jitted **execs**/engine state (the PD/MR
+  analogue).  The six ``Category`` values are its diagonal.
+* ``Hints`` + ``resolve`` — a deterministic planner mapping caller intent
+  (latency target, burstiness, session ordering, footprint budget) to a
+  ``SharingVector``.
+* ``EndpointPlan`` — the fully resolved deployment: a vector plus every
+  knob that used to live as a per-call argument (workers, slots, horizon,
+  prefill buckets, placement, executor).  ``serve.connect`` consumes one
+  of these (or anything ``as_plan`` coerces) and picks the executor.
+
+Resolution is pure and deterministic: the same hints always produce the
+same vector, the vector is monotone in the latency target (a tighter
+target never *raises* any sharing level), and a footprint budget is
+honored whenever any vector can honor it (``tests/test_plan.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple, Union
+
+from repro.core.endpoints import (Category, category_for_level,
+                                  level_group_size)
+
+#: The serving resource types a plan resolves, in planner bump order —
+#: when a footprint budget forces more sharing, executables are shared
+#: first (bit-exact, only compile cost), channels second (latency tail),
+#: slots last (scheduling freedom).
+RESOURCES = ("execs", "channels", "slots")
+
+
+def _check_level(name: str, level: int) -> int:
+    if not isinstance(level, int) or isinstance(level, bool) \
+            or not 1 <= level <= 4:
+        raise ValueError(f"{name} sharing level must be an int in 1..4, "
+                         f"got {level!r}")
+    return level
+
+
+@dataclasses.dataclass(frozen=True)
+class SharingVector:
+    """Independent Fig. 4b sharing levels per serving resource type.
+
+    Attributes:
+      slots: decode-slot admission groups (``serve.slots.SlotPool``) —
+        level 1 is continuous batching (dedicated slot per request),
+        level 4 is one static wave.
+      channels: dispatch-queue groups of the fleet
+        (``core.channels.DispatchPlan``) — level 1 is a queue per worker,
+        level 4 one global funnel.
+      execs: jitted-executable / engine-state groups — level 4 is one
+        shared set of compiled steps per config (the PR-3 default), level
+        1 compiles a private set per worker (process-per-rank isolation,
+        the MPI-everywhere extreme: maximal compile footprint, identical
+        tokens).
+    """
+
+    slots: int = 1
+    channels: int = 1
+    execs: int = 4
+
+    def __post_init__(self):
+        for r in ("slots", "channels", "execs"):
+            _check_level(r, getattr(self, r))
+
+    # ----- diagonal <-> Category ----------------------------------------
+    @classmethod
+    def diagonal(cls, level_or_category) -> "SharingVector":
+        """The diagonal vector at one sharing level (all resource types
+        shared equally) — where the six ``Category`` presets live."""
+        level = (level_or_category.level
+                 if isinstance(level_or_category, Category)
+                 else level_or_category)
+        _check_level("diagonal", level)
+        return cls(slots=level, channels=level, execs=level)
+
+    @property
+    def is_diagonal(self) -> bool:
+        return self.slots == self.channels == self.execs
+
+    @property
+    def category(self) -> Optional[Category]:
+        """The canonical ``Category`` of a diagonal vector (None for the
+        newly reachable off-diagonal plans)."""
+        return category_for_level(self.slots) if self.is_diagonal else None
+
+    # ----- derived group structure --------------------------------------
+    def group_size(self, resource: str, n: int) -> int:
+        """Consumers per shared group for ``n`` units of ``resource``."""
+        return level_group_size(getattr(self, resource), n)
+
+    def exec_group_of(self, worker: int, n_workers: int) -> int:
+        """Which jitted-executable set worker ``worker`` keys into: the
+        third key of ``serve.engine._shared_steps`` — level 4 puts the
+        whole fleet in group 0 (one compiled set, the PR-3 behavior)."""
+        return worker // self.group_size("execs", n_workers)
+
+    # ----- footprint accounting -----------------------------------------
+    def footprint(self, n_workers: int = 1, n_slots: int = 4) -> dict:
+        """Fraction of the fully dedicated deployment's resources each
+        type holds live: distinct slot admission groups over total slots,
+        dispatch queues over workers, compiled executable sets over
+        workers.  1.0 everywhere = the all-dedicated diagonal."""
+        n_workers = max(1, n_workers)
+        n_slots = max(1, n_slots)
+        slot_groups = math.ceil(n_slots / self.group_size("slots", n_slots))
+        return {
+            "slots": slot_groups / n_slots,
+            "channels": math.ceil(
+                n_workers / self.group_size("channels", n_workers))
+            / n_workers,
+            "execs": math.ceil(
+                n_workers / self.group_size("execs", n_workers))
+            / n_workers,
+        }
+
+    def footprint_score(self, n_workers: int = 1, n_slots: int = 4) -> float:
+        """Scalar footprint: the mean of the per-resource fractions (the
+        quantity a ``Hints.footprint_budget`` bounds)."""
+        f = self.footprint(n_workers, n_slots)
+        return sum(f.values()) / len(f)
+
+
+
+@dataclasses.dataclass(frozen=True)
+class Hints:
+    """Caller intent, resolved by ``resolve`` into a ``SharingVector``.
+
+    Attributes:
+      latency_target_ms: p99-ish request latency the caller cares about;
+        tighter targets resolve to more dedicated (lower) sharing levels.
+        None = latency-indifferent.
+      burstiness: 0..1 — how bursty the arrival process is.  Bursty
+        traffic favors *shared* dispatch channels (any group member pulls
+        a stranded request; the paper's work-stealing argument), so high
+        burstiness bumps the channel level by one.
+      session_ordering: requests of one session must start in order —
+        resolves to session-affinity placement (streams map onto channel
+        groups).
+      footprint_budget: optional ceiling on
+        ``SharingVector.footprint_score`` — the "third of the resources"
+        knob.  The planner raises sharing levels (execs, then channels,
+        then slots) until the vector fits.
+      compile_isolation: dedicate a jitted-executable set per worker
+        (exec level 1) — jit-cache isolation at N-fold compile cost.
+    """
+
+    latency_target_ms: Optional[float] = None
+    burstiness: float = 0.0
+    session_ordering: bool = False
+    footprint_budget: Optional[float] = None
+    compile_isolation: bool = False
+
+    def __post_init__(self):
+        if not 0.0 <= self.burstiness <= 1.0:
+            raise ValueError(f"burstiness must be in [0, 1], "
+                             f"got {self.burstiness!r}")
+        if self.latency_target_ms is not None \
+                and self.latency_target_ms <= 0:
+            raise ValueError("latency_target_ms must be positive")
+        if self.footprint_budget is not None \
+                and not 0.0 < self.footprint_budget:
+            raise ValueError("footprint_budget must be positive")
+
+
+# latency target (ms) -> base sharing level: tighter targets buy more
+# dedicated resources.  Monotone by construction.
+_LATENCY_LEVELS: Tuple[Tuple[float, int], ...] = (
+    (50.0, 1), (250.0, 2), (1000.0, 3))
+
+
+def _latency_level(target_ms: Optional[float]) -> int:
+    if target_ms is None:
+        return 2          # the scalable middle: the paper's default pick
+    for bound, level in _LATENCY_LEVELS:
+        if target_ms < bound:
+            return level
+    return 4
+
+
+def resolve(hints: Hints, *, n_workers: int = 1,
+            n_slots: int = 4) -> SharingVector:
+    """Deterministically map intent to a ``SharingVector``.
+
+    Guarantees (property-tested):
+      * deterministic — pure function of its arguments;
+      * monotone in the latency target — a tighter target never raises
+        any resource's sharing level (budget aside);
+      * a ``footprint_budget`` is met whenever the fully shared vector
+        meets it.
+    """
+    base = _latency_level(hints.latency_target_ms)
+    channels = min(4, base + (1 if hints.burstiness >= 0.5 else 0))
+    vec = SharingVector(slots=base, channels=channels,
+                        execs=1 if hints.compile_isolation else 4)
+    if hints.footprint_budget is not None:
+        while vec.footprint_score(n_workers, n_slots) \
+                > hints.footprint_budget:
+            for r in RESOURCES:       # execs -> channels -> slots
+                if getattr(vec, r) < 4:
+                    vec = dataclasses.replace(
+                        vec, **{r: getattr(vec, r) + 1})
+                    break
+            else:
+                break                 # fully shared: nothing left to give
+    return vec
+
+
+Buckets = Union[None, str, Tuple[int, ...]]
+
+_EXECUTORS = ("auto", "continuous", "wave", "fleet")
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointPlan:
+    """A fully resolved serving deployment.
+
+    Everything that used to be a per-call knob on ``ServeEngine`` /
+    ``ContinuousEngine`` / ``fabric.Router`` / ``launch.serve`` flags
+    lives here; ``serve.connect`` consumes one and selects the executor.
+    """
+
+    vector: SharingVector = SharingVector()
+    n_workers: int = 1
+    n_slots: int = 4
+    max_len: int = 512
+    decode_horizon: int = 1
+    prefill_buckets: Buckets = "auto"
+    use_ragged_kernel: bool = False
+    placement: str = "round_robin"
+    executor: str = "auto"            # auto | continuous | wave | fleet
+    preset: Optional[str] = None      # source Category value, if any
+
+    def __post_init__(self):
+        if isinstance(self.prefill_buckets, list):
+            object.__setattr__(self, "prefill_buckets",
+                               tuple(self.prefill_buckets))
+        if self.n_workers < 1:
+            raise ValueError("a plan needs at least one worker")
+        if self.n_slots < 1:
+            raise ValueError("a plan needs at least one slot")
+        if self.decode_horizon < 1:
+            raise ValueError("decode_horizon must be >= 1")
+        if self.executor not in _EXECUTORS:
+            raise ValueError(f"executor must be one of {_EXECUTORS}, "
+                             f"got {self.executor!r}")
+        if self.executor in ("wave", "continuous") and self.n_workers > 1:
+            raise ValueError(f"the {self.executor} executor is "
+                             f"single-worker; n_workers > 1 serves "
+                             f"through the fleet")
+        if self.executor == "fleet" and self.n_workers < 2:
+            raise ValueError("the fleet executor needs n_workers >= 2")
+
+    # ----- construction --------------------------------------------------
+    @classmethod
+    def from_category(cls, category: Category, **overrides) -> "EndpointPlan":
+        """The named preset for a ``Category``: the diagonal vector at its
+        level, remembering the category so presets round-trip (three
+        categories share level 1; the preset keeps their name)."""
+        return cls(vector=SharingVector.diagonal(category),
+                   preset=category.value, **overrides)
+
+    @classmethod
+    def from_preset(cls, name: Union[str, Category],
+                    **overrides) -> "EndpointPlan":
+        category = name if isinstance(name, Category) else Category(name)
+        return cls.from_category(category, **overrides)
+
+    @classmethod
+    def from_hints(cls, hints: Hints, **overrides) -> "EndpointPlan":
+        n_workers = overrides.get("n_workers", 1)
+        n_slots = overrides.get("n_slots", 4)
+        vec = resolve(hints, n_workers=n_workers, n_slots=n_slots)
+        if hints.session_ordering:
+            overrides.setdefault("placement", "session_affinity")
+        return cls(vector=vec, **overrides)
+
+    # ----- derived -------------------------------------------------------
+    @property
+    def category(self) -> Optional[Category]:
+        """Round-trip to ``Category``: the remembered preset, else the
+        canonical category of a diagonal vector, else None."""
+        if self.preset is not None:
+            return Category(self.preset)
+        return self.vector.category
+
+    @property
+    def resolved_executor(self) -> str:
+        if self.executor != "auto":
+            return self.executor
+        return "fleet" if self.n_workers > 1 else "continuous"
+
+    def footprint(self) -> dict:
+        return self.vector.footprint(self.n_workers, self.n_slots)
+
+    def footprint_score(self) -> float:
+        return self.vector.footprint_score(self.n_workers, self.n_slots)
+
+    def exec_group_of(self, worker: int) -> int:
+        return self.vector.exec_group_of(worker, self.n_workers)
+
+
+#: The six paper categories as named presets — the diagonal of the plan
+#: space.  ``EndpointPlan.from_preset("shared_dynamic", n_workers=8)`` etc.
+PRESETS = {c.value: SharingVector.diagonal(c) for c in Category}
+
+
+def as_plan(spec, **overrides) -> EndpointPlan:
+    """Coerce anything plan-shaped into an ``EndpointPlan``:
+
+    ``EndpointPlan`` (overrides applied) | ``Hints`` | ``SharingVector``
+    | ``Category`` | preset name str | None (default plan).
+    """
+    if spec is None:
+        return EndpointPlan(**overrides)
+    if isinstance(spec, EndpointPlan):
+        return dataclasses.replace(spec, **overrides) if overrides else spec
+    if isinstance(spec, Hints):
+        return EndpointPlan.from_hints(spec, **overrides)
+    if isinstance(spec, SharingVector):
+        return EndpointPlan(vector=spec, **overrides)
+    if isinstance(spec, Category):
+        return EndpointPlan.from_category(spec, **overrides)
+    if isinstance(spec, str):
+        return EndpointPlan.from_preset(spec, **overrides)
+    raise TypeError(f"cannot interpret {spec!r} as an EndpointPlan")
+
+
+__all__ = [
+    "RESOURCES", "SharingVector", "Hints", "resolve", "EndpointPlan",
+    "PRESETS", "as_plan", "Buckets",
+]

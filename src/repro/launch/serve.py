@@ -1,32 +1,38 @@
-"""Serving launcher: single engine (wave/continuous) or a worker fleet.
+"""Serving launcher over the `serve.connect` facade (DESIGN.md §11).
+
+The plan is declared either as a preset / explicit sharing vector or as
+hints the planner resolves:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 8 --prompt-len 16 --max-new 12
+      --plan shared_dynamic --requests 8 --prompt-len 16 --max-new 12
 
-  # continuous batching with a dedicated slot per request:
+  # off-diagonal: dedicated decode slots, 4-way-shared dispatch queues
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --engine continuous --category mpi_everywhere --mixed-lengths
+      --plan slots=1,channels=3 --workers 4 --traffic bursty
 
-  # a fleet: 4 real engine workers behind the fabric router, dispatch
-  # queues shared pairwise (the k-way-shared middle):
+  # intent instead of resources: the planner resolves the vector
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --workers 4 --category shared_dynamic --traffic bursty --requests 24
+      --hint latency_target_ms=80 --hint burstiness=0.9 --workers 4
+
+The pre-plan flags (--engine/--category/--workers/--slots/...) keep
+working: they translate to the equivalent preset `EndpointPlan`
+(--category warns: it is the deprecated diagonal spelling).
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
-import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.endpoints import Category
-from repro.models.model import Model
-from repro.serve.engine import ContinuousEngine, Request, ServeEngine
-from repro.serve.fabric import (EngineWorker, Router, TRAFFIC_SHAPES,
-                                bursty_trace, poisson_trace, session_trace)
+from repro.core.plan import EndpointPlan, Hints, SharingVector
+from repro.serve import connect
+from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, poisson_trace, \
+    session_trace
 from repro.serve.fabric.placement import POLICIES
 
 
@@ -59,28 +65,104 @@ def parse_buckets(spec: str):
     return tuple(int(tok) for tok in spec.split(",") if tok.strip())
 
 
-def run_fleet(cfg, params, args) -> None:
-    category = Category(args.category)
-    workers = [
-        EngineWorker(
-            w,
-            ContinuousEngine(cfg, params, n_slots=args.slots,
-                             max_len=args.max_len,
-                             use_ragged_kernel=args.ragged_kernel,
-                             decode_horizon=args.decode_horizon,
-                             prefill_buckets=parse_buckets(
-                                 args.prefill_buckets)),
-            vocab=cfg.vocab)
-        for w in range(args.workers)]
-    router = Router(workers, category, placement=args.placement)
+def parse_vector(spec: str) -> SharingVector:
+    """--plan as an explicit vector: 'slots=1,channels=3[,execs=4]'."""
+    fields = {}
+    for tok in spec.split(","):
+        k, _, v = tok.partition("=")
+        fields[k.strip()] = int(v)
+    return SharingVector(**fields)
+
+
+_HINT_TYPES = {"latency_target_ms": float, "burstiness": float,
+               "footprint_budget": float,
+               "session_ordering": lambda v: v.lower() in ("1", "true",
+                                                           "yes", "on"),
+               "compile_isolation": lambda v: v.lower() in ("1", "true",
+                                                            "yes", "on")}
+
+
+def parse_hints(items) -> Hints:
+    """--hint k=v (repeatable) -> Hints."""
+    fields = {}
+    for item in items:
+        k, _, v = item.partition("=")
+        if k not in _HINT_TYPES:
+            raise ValueError(f"unknown hint {k!r}; one of "
+                             f"{sorted(_HINT_TYPES)}")
+        fields[k] = _HINT_TYPES[k](v)
+    return Hints(**fields)
+
+
+def build_plan(args, ap) -> EndpointPlan:
+    """Resolve the flag surface — new (--plan/--hint) or legacy
+    (--engine/--category) — into ONE EndpointPlan."""
+    knobs = dict(n_workers=args.workers, n_slots=args.slots,
+                 max_len=args.max_len, decode_horizon=args.decode_horizon,
+                 prefill_buckets=parse_buckets(args.prefill_buckets),
+                 use_ragged_kernel=args.ragged_kernel)
+    if args.placement is not None:
+        # only an explicit flag pins placement — hints may resolve their
+        # own (session_ordering -> session_affinity)
+        knobs["placement"] = args.placement
+    if args.plan and args.hint:
+        ap.error("--plan and --hint are exclusive: a plan IS resolved "
+                 "hints")
+    if (args.plan or args.hint) and args.category:
+        ap.error("--category conflicts with --plan/--hint; the preset "
+                 "spelling is --plan " + args.category)
+    if (args.plan or args.hint) and args.engine is not None:
+        ap.error(f"--engine {args.engine} conflicts with --plan/--hint "
+                 f"(a plan resolves its own executor)")
+    if args.plan:
+        if args.plan in (c.value for c in Category):
+            return EndpointPlan.from_preset(args.plan, **knobs)
+        try:
+            return EndpointPlan(vector=parse_vector(args.plan), **knobs)
+        except (TypeError, ValueError) as e:
+            ap.error(f"--plan must be a preset "
+                     f"({', '.join(c.value for c in Category)}) or "
+                     f"'slots=..,channels=..[,execs=..]': {e}")
+    if args.hint:
+        try:
+            return EndpointPlan.from_hints(parse_hints(args.hint), **knobs)
+        except ValueError as e:
+            ap.error(str(e))
+    # ----- legacy flag translation ---------------------------------------
+    category = Category.MPI_EVERYWHERE
+    if args.category is not None:
+        warnings.warn(
+            "--category is deprecated and now means the DIAGONAL preset: "
+            "the level applies to slots, channels, AND executables (the "
+            "pre-plan fleet shared only the dispatch queues — that "
+            "spelling is --plan slots=1,channels=N).  Use --plan "
+            "<preset|slots=..,channels=..> or --hint k=v",
+            DeprecationWarning, stacklevel=2)
+        category = Category(args.category)
+    executor = "auto"
+    if args.workers == 1 and (args.engine or "wave") == "wave":
+        executor = "wave"             # the historical single-engine default
+        knobs.update(decode_horizon=1, prefill_buckets="auto")
+    return EndpointPlan.from_category(category, executor=executor, **knobs)
+
+
+def run_fleet(cfg, client, args) -> None:
     trace = make_trace(args)
+    for a in trace:
+        rng = np.random.default_rng(a.rid)
+        client.submit(rng.integers(1, cfg.vocab,
+                                   size=a.prompt_len).astype(np.int32),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns,
+                      session=a.session)
     t0 = time.time()
-    rep = router.run(trace)
+    client.run()
     dt = time.time() - t0
+    rep = client.report
+    v = client.plan.vector
     u = rep.endpoint_usage
-    print(f"fleet: {rep.n_workers} workers, category={category.value} "
-          f"({router.plan.n_queues} dispatch queues, "
-          f"group size {router.plan.group_size}), "
+    preset = f" preset={client.plan.preset}" if client.plan.preset else ""
+    print(f"fleet: {rep.n_workers} workers, vector=(slots={v.slots}, "
+          f"channels={v.channels}, execs={v.execs}){preset}, "
           f"placement={rep.placement}, traffic={args.traffic}")
     print(f"  {rep.n_completed}/{rep.n_arrivals} requests, "
           f"{rep.total_new_tokens} tokens in {rep.makespan_ns / 1e6:.2f} "
@@ -89,45 +171,37 @@ def run_fleet(cfg, params, args) -> None:
           f"p99={rep.latency_percentile(0.99) / 1e6:.2f}ms "
           f"occupancy={rep.occupancy:.2f} fairness={rep.fairness:.3f} "
           f"lock_wait={rep.lock_wait_ns:.0f}ns")
-    print(f"  endpoint footprint vs dedicated: "
-          f"uuars={u['uuars'] * 100:.1f}% memory={u['memory'] * 100:.1f}%")
+    print(f"  footprint: plan={client.plan.footprint_score() * 100:.1f}% "
+          f"(slots/channels/execs "
+          f"{'/'.join(f'{x * 100:.0f}%' for x in client.plan.footprint().values())}), "
+          f"endpoint uuars={u['uuars'] * 100:.1f}% "
+          f"memory={u['memory'] * 100:.1f}%")
     for c in rep.completions[:4]:
         print(f"  req {c.rid} (worker {c.worker}): {c.output}")
 
 
-def run_single(cfg, params, args) -> None:
-    if args.engine == "continuous":
-        engine = ContinuousEngine(cfg, params, n_slots=args.slots,
-                                  max_len=args.max_len,
-                                  category=Category(args.category),
-                                  use_ragged_kernel=args.ragged_kernel,
-                                  decode_horizon=args.decode_horizon,
-                                  prefill_buckets=parse_buckets(
-                                      args.prefill_buckets))
-    else:
-        engine = ServeEngine(cfg, params, n_slots=args.slots,
-                             max_len=args.max_len)
+def run_single(cfg, client, args) -> None:
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = args.prompt_len
         if args.mixed_lengths:
             plen = int(rng.choice([max(1, plen // 2), plen, 2 * plen]))
-        engine.submit(Request(
-            rid=i,
-            prompt=rng.integers(1, cfg.vocab, size=plen).astype(np.int32),
-            max_new_tokens=args.max_new))
+        client.submit(rng.integers(1, cfg.vocab,
+                                   size=plen).astype(np.int32),
+                      max_new_tokens=args.max_new)
     t0 = time.time()
-    done = engine.run()
+    out = client.run()
     dt = time.time() - t0
-    n_tok = sum(len(r.output) for r in done)
+    engine = client.engine
+    n_tok = sum(len(toks) for toks in out.values())
     lat = sorted(engine.latency.values())
     p50 = lat[len(lat) // 2] if lat else 0.0
-    print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, engine={args.engine}, "
+    print(f"served {len(out)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, executor={client.executor}, "
           f"p50 latency {p50:.2f}s)")
-    if args.engine == "continuous":
+    if client.executor == "continuous":
         syncs = engine.stats["host_syncs"] / max(1, n_tok)
-        print(f"slot pool: {engine.pool.category.value} "
+        print(f"slot pool: level {engine.pool.level} "
               f"(group size {engine.pool.group_size}), "
               f"occupancy {engine.occupancy:.2f}, "
               f"{engine.stats['decode_steps']} decode steps in "
@@ -137,27 +211,40 @@ def run_single(cfg, params, args) -> None:
               f"{engine.stats['prefilled_requests']} requests "
               f"(buckets {list(engine.prefill_buckets) or 'off'}), "
               f"{syncs:.2f} host syncs/token")
-    for r in done[:4]:
-        print(f"  req {r.rid}: {r.output}")
+    for rid in sorted(out)[:4]:
+        print(f"  req {rid}: {out[rid]}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCHS))
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="endpoint plan: a preset (one of "
+                         f"{[c.value for c in Category]}) or an explicit "
+                         "vector 'slots=1,channels=3[,execs=4]'")
+    ap.add_argument("--hint", action="append", default=[],
+                    metavar="K=V",
+                    help="intent for the planner (repeatable): "
+                         "latency_target_ms=, burstiness=, "
+                         "session_ordering=, footprint_budget=, "
+                         "compile_isolation=")
     ap.add_argument("--engine", default=None,
                     choices=("wave", "continuous"),
-                    help="single-engine scheduler (default wave); a "
-                         "fleet (--workers > 1) is always continuous")
-    ap.add_argument("--category", default="mpi_everywhere",
+                    help="[legacy] single-engine scheduler (default "
+                         "wave); a fleet (--workers > 1) is always "
+                         "continuous")
+    ap.add_argument("--category", default=None,
                     choices=[c.value for c in Category],
-                    help="sharing category: slot pool (single engine) or "
-                         "dispatch queues (--workers > 1)")
+                    help="[deprecated] diagonal sharing preset; use "
+                         "--plan")
     ap.add_argument("--workers", type=int, default=1,
                     help="> 1 serves through the fabric router with this "
                          "many continuous-engine workers")
-    ap.add_argument("--placement", default="round_robin",
-                    choices=sorted(POLICIES))
+    ap.add_argument("--placement", default=None,
+                    choices=sorted(POLICIES),
+                    help="dispatch placement policy (default round_robin; "
+                         "left unset, hints may resolve their own)")
     ap.add_argument("--traffic", default="bursty",
                     choices=sorted(TRAFFIC_SHAPES))
     ap.add_argument("--requests", type=int, default=8)
@@ -183,8 +270,8 @@ def main(argv=None):
     if args.workers > 1 and args.engine == "wave":
         ap.error("--workers > 1 serves through continuous-engine workers; "
                  "--engine wave only applies to a single engine")
-    args.engine = args.engine or "wave"
-    if args.workers == 1 and args.engine == "wave":
+    if args.workers == 1 and (args.engine or "wave") == "wave" \
+            and not (args.plan or args.hint):
         if args.decode_horizon != 1:
             ap.error("--decode-horizon applies to the continuous engine")
         if parse_buckets(args.prefill_buckets) not in ("auto", "pow2",
@@ -198,13 +285,13 @@ def main(argv=None):
         # path instead truncates at the cache budget (a supported mode)
         ap.error(f"longest prompt ({pmax}) + max-new ({args.max_new}) "
                  f"must fit max-len ({args.max_len}) in fleet mode")
+    plan = build_plan(args, ap)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    if args.workers > 1:
-        run_fleet(cfg, params, args)
+    client = connect(cfg, plan, seed=args.seed)
+    if plan.n_workers > 1:
+        run_fleet(cfg, client, args)
     else:
-        run_single(cfg, params, args)
+        run_single(cfg, client, args)
 
 
 if __name__ == "__main__":

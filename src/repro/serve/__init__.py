@@ -1,4 +1,18 @@
+"""Serving: one `connect` facade over plan-selected executors.
+
+`serve.connect(cfg, plan_or_hints) -> ServeClient` is the public entry
+point (DESIGN.md §11); `ServeEngine` / `ContinuousEngine` / the fabric
+`Router` remain importable as the internal executors it selects.
+"""
+
+from repro.core.plan import (EndpointPlan, Hints, PRESETS, SharingVector,
+                             as_plan, resolve)
+from repro.serve.api import ServeClient, Stream, connect
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 from repro.serve.slots import SlotPool
 
-__all__ = ["ContinuousEngine", "Request", "ServeEngine", "SlotPool"]
+__all__ = [
+    "ContinuousEngine", "EndpointPlan", "Hints", "PRESETS", "Request",
+    "ServeClient", "ServeEngine", "SharingVector", "SlotPool", "Stream",
+    "as_plan", "connect", "resolve",
+]

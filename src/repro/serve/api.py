@@ -1,0 +1,348 @@
+"""`serve.connect`: the one serving entry point (DESIGN.md §11).
+
+The pre-plan API exposed three divergent entry points — ``ServeEngine``,
+``ContinuousEngine``, ``fabric.Router`` — each with its own pile of
+per-call knobs.  Following the paper authors' follow-up argument (stop
+exposing user-visible endpoints; let callers declare intent and streams,
+resolve resources internally), callers now do:
+
+    client = serve.connect(cfg, "shared_dynamic", params=params)
+    client = serve.connect(cfg, Hints(latency_target_ms=80,
+                                      burstiness=0.9), n_workers=8)
+    client = serve.connect(cfg, SharingVector(slots=1, channels=3))
+
+    s = client.stream()                  # ordered lane (MPIX-stream-like)
+    s.submit(prompt_a); s.submit(prompt_b)
+    client.submit(prompt_c)              # unordered: free concurrency
+    tokens = client.run()                # {rid: [generated tokens]}
+
+``connect`` resolves anything plan-shaped (``core.plan.as_plan``) into an
+``EndpointPlan`` and the client picks the executor: a fleet of
+continuous-batching workers behind the fabric router when
+``plan.n_workers > 1``, a single ``ContinuousEngine`` otherwise, or the
+legacy wave engine when the plan says ``executor="wave"``.  The old
+classes survive as these internal executors; every knob they used to take
+lives on the plan.
+
+**Stream semantics.**  A ``Stream`` is an ordered lane: its requests
+start AND finish in submission order (request *i+1* is released into the
+engine only after request *i* retires), while different streams — and all
+unordered submissions — run concurrently.  In fleet mode a stream
+additionally carries its id as the fabric session key, so
+session-affinity placement pins the lane to one channel group (the
+stream → channel-group mapping); in single-engine mode the lane occupies
+at most one slot of the pool's admission groups at a time (the stream →
+slot-group mapping).  Ordering changes WHEN tokens are produced, never
+their values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.core.plan import EndpointPlan, Hints, SharingVector, as_plan
+from repro.models.model import Model
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.fabric.placement import POLICIES
+from repro.serve.fabric.router import (Completion, EngineWorker,
+                                       FleetReport, Router)
+from repro.serve.fabric.traffic import Arrival
+
+# fabric session keys for streams live above any plausible caller-supplied
+# session id, so a stream's affinity key can never alias a user session
+_STREAM_SESSION_BASE = 1 << 32
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One submitted request waiting for the next ``run()``."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int]
+    sid: Optional[int]                # stream id; None = unordered
+    at_ns: float                      # virtual arrival time (fleet mode)
+    session: int = -1                 # affinity key for unordered requests
+
+
+class Stream:
+    """An ordered lane of one ``ServeClient`` (explicit, MPIX-style).
+
+    Requests submitted to a stream complete in submission order; distinct
+    streams progress concurrently.  Obtain one via ``client.stream()``.
+    """
+
+    def __init__(self, client: "ServeClient", sid: int,
+                 name: Optional[str] = None):
+        self.client = client
+        self.sid = sid
+        self.name = name or f"stream{sid}"
+        self.rids: List[int] = []
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None, at_ns: float = 0.0) -> int:
+        return self.client.submit(prompt, max_new_tokens=max_new_tokens,
+                                  eos_id=eos_id, stream=self, at_ns=at_ns)
+
+    @property
+    def outputs(self) -> List[Optional[List[int]]]:
+        """This stream's generated tokens, in submission order (None for
+        requests the client has not run yet)."""
+        return [self.client.results.get(r) for r in self.rids]
+
+    def __repr__(self):
+        return f"Stream({self.name!r}, sid={self.sid}, " \
+               f"requests={len(self.rids)})"
+
+
+class ServeClient:
+    """A connected serving session over one resolved ``EndpointPlan``.
+
+    Build via ``serve.connect``.  ``submit`` queues work (optionally on a
+    ``Stream``), ``run`` drains everything queued so far and returns
+    ``{rid: [tokens]}``; ``results`` accumulates across runs.
+    """
+
+    def __init__(self, cfg, params, plan: EndpointPlan):
+        if plan.placement not in POLICIES:
+            raise ValueError(f"unknown placement {plan.placement!r}; "
+                             f"one of {sorted(POLICIES)}")
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.executor = plan.resolved_executor
+        self.results: Dict[int, List[int]] = {}
+        self.report: Optional[FleetReport] = None   # last fleet report
+        self._pending: List[_Pending] = []
+        self._requests: Dict[int, _Pending] = {}
+        self._streams: List[Stream] = []
+        self._next_rid = 0
+        self._closed = False
+        self.engine = None            # single-executor engine
+        self.workers: List[EngineWorker] = []
+        if self.executor == "wave":
+            self.engine = ServeEngine(cfg, params, plan=plan)
+        elif self.executor == "continuous":
+            self.engine = ContinuousEngine(cfg, params, plan=plan,
+                                           exec_group=plan.exec_group_of(0))
+        # fleet workers are built lazily on the first run()
+
+    # ----- submission -----------------------------------------------------
+    def stream(self, name: Optional[str] = None) -> Stream:
+        """A new ordered lane.  Wave execution cannot order (one static
+        wave is the level-4 extreme), so streams need a continuous or
+        fleet executor."""
+        if self.executor == "wave":
+            raise ValueError("ordered streams need the continuous or "
+                             "fleet executor; the wave engine is one "
+                             "unordered static wave")
+        s = Stream(self, len(self._streams), name)
+        self._streams.append(s)
+        return s
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               stream: Union[Stream, int, None] = None,
+               at_ns: float = 0.0, session: int = -1) -> int:
+        """Queue one request; -> its rid.  ``stream`` orders it behind
+        the stream's earlier requests; ``at_ns`` is its virtual arrival
+        time in fleet mode (ignored by the single-engine executors, which
+        are closed-loop); ``session`` is a placement-affinity key for
+        unordered requests (a stream already carries its own)."""
+        if self._closed:
+            raise RuntimeError("client is closed")
+        if isinstance(stream, Stream):
+            if stream.client is not self:
+                raise ValueError("stream belongs to a different client")
+        elif stream is not None:
+            stream = self._streams[stream]
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if self.executor != "wave" and len(prompt) >= self.plan.max_len:
+            # the continuous engines (and fleet accounting) need the
+            # prompt to fit; the wave engine instead truncates the decode
+            # budget at the cache edge — a supported legacy mode
+            raise ValueError(f"prompt of {len(prompt)} tokens cannot fit "
+                             f"max_len={self.plan.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        p = _Pending(rid=rid, prompt=prompt,
+                     max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                     sid=stream.sid if stream is not None else None,
+                     at_ns=float(at_ns), session=int(session))
+        self._pending.append(p)
+        self._requests[rid] = p
+        if stream is not None:
+            stream.rids.append(rid)
+        return rid
+
+    def generate(self, prompts, max_new_tokens: int = 16) -> List[List[int]]:
+        """Convenience: submit a batch of unordered prompts, run, and
+        return their outputs in input order."""
+        rids = [self.submit(p, max_new_tokens=max_new_tokens)
+                for p in prompts]
+        out = self.run()
+        return [out[r] for r in rids]
+
+    # ----- execution ------------------------------------------------------
+    def run(self) -> Dict[int, List[int]]:
+        """Serve everything queued since the last run; -> their
+        ``{rid: [tokens]}`` (also merged into ``results``)."""
+        if self._closed:
+            raise RuntimeError("client is closed")
+        batch, self._pending = self._pending, []
+        if not batch:
+            return {}
+        if self.executor == "fleet":
+            out = self._run_fleet(batch)
+        elif self.executor == "wave":
+            out = self._run_wave(batch)
+        else:
+            out = self._run_continuous(batch)
+        missing = {p.rid for p in batch} - out.keys()
+        assert not missing, f"requests lost by the executor: {missing}"
+        self.results.update(out)
+        return out
+
+    def _request(self, p: _Pending) -> Request:
+        return Request(rid=p.rid, prompt=p.prompt,
+                       max_new_tokens=p.max_new_tokens, eos_id=p.eos_id)
+
+    def _split(self, batch):
+        """-> (unordered pendings, {sid: deque of its pendings})."""
+        unordered, streams = [], {}
+        for p in batch:
+            if p.sid is None:
+                unordered.append(p)
+            else:
+                streams.setdefault(p.sid, deque()).append(p)
+        return unordered, streams
+
+    def _run_wave(self, batch) -> Dict[int, List[int]]:
+        eng = self.engine
+        for p in batch:
+            eng.submit(self._request(p))
+        rids = {p.rid for p in batch}
+        eng.run()
+        return {r.rid: list(r.output) for r in eng.done if r.rid in rids}
+
+    def _run_continuous(self, batch) -> Dict[int, List[int]]:
+        """Drive the single engine's external-stepping hooks, releasing
+        each stream's next request only once its predecessor retires —
+        per-stream FIFO over the slot pool, cross-stream concurrency."""
+        eng = self.engine
+        unordered, streams = self._split(batch)
+        inflight = {sid: None for sid in streams}
+        for p in unordered:
+            eng.submit(self._request(p))
+        out: Dict[int, List[int]] = {}
+        eng.start()
+        # latency baseline per run(), exactly as ContinuousEngine.run()
+        # re-baselines (start() is idempotent and keeps the first _t0)
+        eng._t0 = time.perf_counter()
+        while True:
+            for sid in sorted(streams):
+                if inflight[sid] is None and streams[sid]:
+                    p = streams[sid].popleft()
+                    eng.submit(self._request(p))
+                    inflight[sid] = p.rid
+            if not eng.has_work:
+                break
+            eng.admit_waiting()
+            for r in eng.step():
+                out[r.rid] = list(r.output)
+                sid = self._requests[r.rid].sid
+                if sid is not None and inflight.get(sid) == r.rid:
+                    inflight[sid] = None
+        return out
+
+    def _build_workers(self):
+        plan = self.plan
+
+        def request_fn(arrival: Arrival) -> Request:
+            return self._request(self._requests[arrival.rid])
+
+        self.workers = [
+            EngineWorker(
+                w,
+                ContinuousEngine(self.cfg, self.params, plan=plan,
+                                 exec_group=plan.exec_group_of(w)),
+                request_fn=request_fn)
+            for w in range(plan.n_workers)]
+
+    def _run_fleet(self, batch) -> Dict[int, List[int]]:
+        """One router pass over fresh channels (the engines persist and
+        keep their jitted state): unordered requests and stream heads
+        enter at their arrival times; each completion of a stream request
+        releases the stream's next via the router's ``on_complete`` hook
+        — per-stream FIFO mapped onto the channel groups."""
+        if not self.workers:
+            self._build_workers()
+        unordered, waiting = self._split(batch)
+
+        def arrival(p: _Pending, t_ns: float) -> Arrival:
+            return Arrival(rid=p.rid, t_ns=t_ns,
+                           prompt_len=len(p.prompt),
+                           max_new_tokens=p.max_new_tokens,
+                           session=(p.session if p.sid is None
+                                    else _STREAM_SESSION_BASE + p.sid))
+
+        trace = [arrival(p, p.at_ns) for p in unordered]
+        for q in waiting.values():
+            head = q.popleft()
+            trace.append(arrival(head, head.at_ns))
+        trace.sort(key=lambda a: (a.t_ns, a.rid))
+
+        def on_complete(c: Completion):
+            sid = self._requests[c.rid].sid
+            if sid is None or not waiting.get(sid):
+                return ()
+            nxt = waiting[sid].popleft()
+            return [arrival(nxt, max(nxt.at_ns, c.t_done_ns))]
+
+        router = Router(self.workers, self.plan,
+                        placement=self.plan.placement,
+                        on_complete=on_complete)
+        self.report = router.run(trace)
+        return {c.rid: list(c.output)
+                for c in self.report.completions}
+
+    # ----- lifecycle ------------------------------------------------------
+    def close(self):
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def __repr__(self):
+        v = self.plan.vector
+        return (f"ServeClient(executor={self.executor!r}, "
+                f"vector=(slots={v.slots}, channels={v.channels}, "
+                f"execs={v.execs}), workers={self.plan.n_workers}, "
+                f"slots={self.plan.n_slots})")
+
+
+def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
+                             None] = None, *,
+            params=None, seed: int = 0, **overrides) -> ServeClient:
+    """Connect a serving session: resolve ``plan`` (an ``EndpointPlan``,
+    ``Hints``, ``SharingVector``, ``Category``/preset name, or None for
+    the default plan; ``overrides`` set/replace plan fields) and return a
+    ``ServeClient`` over the executor the plan selects.  ``params``
+    defaults to freshly initialized weights (``seed``)."""
+    resolved = as_plan(plan, **overrides)
+    if params is None:
+        params = Model(cfg).init(jax.random.PRNGKey(seed))
+    return ServeClient(cfg, params, resolved)

@@ -11,7 +11,8 @@ applied to decode slots: per-slot sequence positions (``Model.init_cache``
 ``per_slot`` + position-aware ``decode_step``), ragged slot lengths in one
 shared cache, and slot admission/eviction so a finished request frees its
 slot for a queued request mid-decode.  The admission policy is a
-``SlotPool`` keyed by ``core.endpoints.Category`` (DESIGN.md §3): a
+``SlotPool`` keyed by the ``slots`` sharing level of an
+``EndpointPlan``'s ``SharingVector`` (DESIGN.md §3, §11): a
 dedicated slot per request is MPI-everywhere, one shared wave is
 MPI+threads, and k-way-shared slot groups are the scalable middle.
 
@@ -50,9 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.endpoints import Category
+from repro.core.plan import EndpointPlan, SharingVector
 from repro.models.model import Model
-from repro.serve.slots import SlotPool
+from repro.serve.slots import SlotPool, _coerce_level
 
 
 @dataclasses.dataclass
@@ -68,11 +69,17 @@ class ServeEngine:
     """Static wave batching (the MPI+threads extreme of the slot pools)."""
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, plan: Optional[EndpointPlan] = None,
+                 exec_group: int = 0):
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
             "the wave engine serves decoder-only token models"
+        if plan is not None:
+            n_slots, max_len = plan.n_slots, plan.max_len
         self.cfg = cfg
         self.params = params
+        self.plan = plan or EndpointPlan(
+            vector=SharingVector(slots=4), n_slots=n_slots,
+            max_len=max_len, executor="wave")
         self.n_slots = n_slots
         self.max_len = max_len
         self.queue: deque = deque()
@@ -81,8 +88,9 @@ class ServeEngine:
         self._t0 = 0.0
         # shared executables: every wave engine (and every continuous
         # engine) of one config reuses the same jitted decode/prefill
-        # instead of re-jitting per-instance lambdas (N-fold compile)
-        steps = _shared_steps(cfg, False)
+        # instead of re-jitting per-instance lambdas (N-fold compile).
+        # ``exec_group`` (the plan's execs axis) splits that sharing.
+        steps = _shared_steps(cfg, False, exec_group)
         self.model = steps.model
         self._decode = steps.decode
         self._prefill = steps.prefill
@@ -152,11 +160,16 @@ class ServeEngine:
 
 @dataclasses.dataclass(frozen=True)
 class SharedSteps:
-    """One set of jitted executables per (config, ragged-kernel) pair —
-    every engine of a fleet shares them instead of re-jitting identical
-    lambdas per worker (N-fold compile otherwise).  jit's own shape cache
-    bounds specializations: ``prefill_padded`` compiles once per length
-    bucket, ``horizon`` once per decode-horizon K."""
+    """One set of jitted executables per (config, ragged-kernel,
+    exec-group) triple — every engine of one exec-sharing group reuses
+    them instead of re-jitting identical lambdas per worker (N-fold
+    compile otherwise).  ``exec_group`` realizes the ``execs`` axis of a
+    ``core.plan.SharingVector``: level 4 keys the whole fleet to group 0
+    (one compiled set, the historical behavior), level 1 gives every
+    worker a private set (process-per-rank isolation at N-fold compile
+    footprint, token-identical output).  jit's own shape cache bounds
+    specializations: ``admit_packed`` compiles once per length bucket,
+    ``horizon`` once per decode-horizon K."""
 
     model: Model
     decode: object            # (params, cache, tokens) -> (logits, cache)
@@ -166,8 +179,16 @@ class SharedSteps:
     horizon: object           # (params, cache, state, K, max_len)
 
 
+def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool,
+                  exec_group: int = 0) -> SharedSteps:
+    # normalize the default so (cfg, ragged) and (cfg, ragged, 0) hit the
+    # same cache line (lru_cache keys the raw call signature)
+    return _shared_steps_cached(cfg, use_ragged_kernel, exec_group)
+
+
 @functools.lru_cache(maxsize=None)
-def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool) -> SharedSteps:
+def _shared_steps_cached(cfg: ArchConfig, use_ragged_kernel: bool,
+                         exec_group: int) -> SharedSteps:
     model = Model(cfg)
     decode = jax.jit(
         lambda p, c, t: model.decode_step(
@@ -304,14 +325,29 @@ class ContinuousEngine:
     """
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
-                 max_len: int = 512,
-                 category: Category = Category.MPI_EVERYWHERE,
+                 max_len: int = 512, category=None, slot_level: int = None,
                  pool: Optional[SlotPool] = None,
                  use_ragged_kernel: bool = False,
                  decode_horizon: int = 1,
-                 prefill_buckets: Buckets = "auto"):
+                 prefill_buckets: Buckets = "auto",
+                 plan: Optional[EndpointPlan] = None,
+                 exec_group: int = 0):
         assert cfg.input_mode == "tokens" and not cfg.is_encdec, \
             "the continuous engine serves decoder-only token models"
+        if category is not None:
+            # deprecated path: the scalar category collapses to its slot
+            # sharing level (the diagonal); _coerce_level warns
+            slot_level = _coerce_level(None, category, "ContinuousEngine")
+        if plan is not None:
+            # the plan is authoritative for every knob it carries; the
+            # engine consumes only the single-worker slice (the facade
+            # hands fleet-level axes to the router / exec grouping)
+            n_slots, max_len = plan.n_slots, plan.max_len
+            decode_horizon = plan.decode_horizon
+            prefill_buckets = plan.prefill_buckets
+            use_ragged_kernel = plan.use_ragged_kernel
+            slot_level = plan.vector.slots if slot_level is None \
+                else slot_level
         if decode_horizon < 1:
             raise ValueError(f"decode_horizon must be >= 1, "
                              f"got {decode_horizon}")
@@ -319,8 +355,15 @@ class ContinuousEngine:
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.pool = pool or SlotPool(category, n_slots)
+        self.pool = pool or SlotPool(
+            1 if slot_level is None else slot_level, n_slots)
         assert self.pool.n_slots == n_slots
+        self.plan = plan or EndpointPlan(
+            vector=SharingVector(slots=self.pool.level),
+            n_slots=n_slots, max_len=max_len,
+            decode_horizon=decode_horizon,
+            prefill_buckets=prefill_buckets,
+            use_ragged_kernel=use_ragged_kernel, executor="continuous")
         self.decode_horizon = decode_horizon
         self.queue: deque = deque()
         self.done: List[Request] = []
@@ -338,7 +381,7 @@ class ContinuousEngine:
                       "slot_steps": 0, "busy_slot_steps": 0,
                       "prefills": 0, "prefilled_requests": 0,
                       "host_syncs": 0}
-        self._steps = _shared_steps(cfg, use_ragged_kernel)
+        self._steps = _shared_steps(cfg, use_ragged_kernel, exec_group)
         self.model = self._steps.model
         self._decode = self._steps.decode
         self._prefill = self._steps.prefill

@@ -1,6 +1,7 @@
 """Serving fabric: router, dispatch channels, and a worker fleet whose
-queue sharing structure is keyed by the paper's endpoint categories
-(DESIGN.md §9)."""
+queue sharing structure is keyed by the ``channels`` axis of a
+``core.plan.SharingVector`` (historically: the paper's endpoint
+categories — still accepted) (DESIGN.md §9, §11)."""
 
 from repro.serve.fabric.channels import DispatchChannel
 from repro.serve.fabric.placement import POLICIES, make_policy

@@ -36,7 +36,8 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.channels import DispatchPlan
-from repro.core.endpoints import Category
+from repro.core.endpoints import Category, category_for_level
+from repro.core.plan import EndpointPlan, SharingVector
 from repro.serve.engine import ContinuousEngine, Request
 from repro.serve.fabric.channels import DispatchChannel
 from repro.serve.fabric.placement import PlacementPolicy, make_policy
@@ -88,11 +89,14 @@ class SimWorker:
 
     def __init__(self, wid: int, *, n_slots: int = 4,
                  costs: FabricCosts = FabricCosts(),
-                 slot_category: Category = Category.MPI_EVERYWHERE):
+                 slot_level: int = 1, slot_category: Category = None):
         self.wid = wid
         self.n_slots = n_slots
         self.costs = costs
-        self.pool = SlotPool(slot_category, n_slots)
+        # slot_category is the deprecated spelling (SlotPool warns)
+        self.pool = (SlotPool(category=slot_category, n_slots=n_slots)
+                     if slot_category is not None
+                     else SlotPool(slot_level, n_slots))
         self._slots: List[Optional[_Live]] = [None] * n_slots
         self.stats = {"steps": 0, "slot_steps": 0, "busy_slot_steps": 0,
                       "tokens": 0, "admitted": 0}
@@ -147,6 +151,7 @@ class EngineWorker:
     def __init__(self, wid: int, engine: ContinuousEngine, *,
                  costs: FabricCosts = FabricCosts(),
                  prompt_fn: Optional[Callable[[Arrival], np.ndarray]] = None,
+                 request_fn: Optional[Callable[[Arrival], Request]] = None,
                  vocab: int = 256):
         self.wid = wid
         self.engine = engine
@@ -154,6 +159,9 @@ class EngineWorker:
         self.n_slots = engine.n_slots
         self.prompt_fn = prompt_fn or (lambda a: np.random.default_rng(
             a.rid).integers(1, vocab, size=a.prompt_len).astype(np.int32))
+        # request_fn overrides the whole Request (the ServeClient facade
+        # carries real prompts and eos ids through the fabric this way)
+        self.request_fn = request_fn
         self.stats = {"steps": 0, "slot_steps": 0, "busy_slot_steps": 0,
                       "tokens": 0, "admitted": 0}
         engine.start()
@@ -167,9 +175,12 @@ class EngineWorker:
                    - len(self.engine.queue))
 
     def admit(self, arrival: Arrival, t_ns: float) -> float:
-        self.engine.submit(Request(rid=arrival.rid,
-                                   prompt=self.prompt_fn(arrival),
-                                   max_new_tokens=arrival.max_new_tokens))
+        if self.request_fn is not None:
+            self.engine.submit(self.request_fn(arrival))
+        else:
+            self.engine.submit(Request(
+                rid=arrival.rid, prompt=self.prompt_fn(arrival),
+                max_new_tokens=arrival.max_new_tokens))
         self.stats["admitted"] += 1
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
@@ -218,6 +229,7 @@ class FleetReport:
     lock_wait_ns: float
     peak_depths: List[int]
     endpoint_usage: dict
+    vector: Optional[SharingVector] = None    # the plan axes actually run
 
     @property
     def n_completed(self) -> int:
@@ -244,17 +256,44 @@ class FleetReport:
 
 class Router:
     """Fabric frontend: place arrivals onto dispatch channels and drive
-    the worker fleet in virtual time."""
+    the worker fleet in virtual time.
 
-    def __init__(self, workers: List, category: Category, *,
+    ``sharing`` is anything that names a channel sharing level: a bare
+    Fig. 4b level int, a ``core.plan.SharingVector`` / ``EndpointPlan``
+    (their ``channels`` axis), or — the historical spelling — a
+    ``Category`` (collapses to its level).  ``on_complete``, if given, is
+    called once per completion and may return new ``Arrival``s to inject
+    at (or after) the completion's virtual time — the ``ServeClient``
+    facade chains each stream's next request this way (per-stream FIFO).
+    """
+
+    def __init__(self, workers: List, sharing, *,
                  placement: str = "round_robin",
-                 costs: FabricCosts = FabricCosts()):
+                 costs: FabricCosts = FabricCosts(),
+                 on_complete: Optional[Callable] = None):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
+        if isinstance(sharing, EndpointPlan):
+            sharing = sharing.vector
+        if isinstance(sharing, SharingVector):
+            self.vector = sharing
+            plan_key = sharing.channels
+            self.category = category_for_level(plan_key)
+        elif isinstance(sharing, Category):
+            # the historical scalar spelling keys the dispatch queues
+            # only — the fabric never owned the slot/exec axes, so no
+            # vector is claimed for the report
+            self.vector = None
+            plan_key = sharing            # DispatchPlan keeps the exact
+            self.category = sharing       # category for Table-1 pricing
+        else:
+            self.vector = None
+            plan_key = int(sharing)
+            self.category = category_for_level(plan_key)
         self.workers = workers
-        self.category = category
         self.costs = costs
-        self.plan = DispatchPlan(category, len(workers))
+        self.on_complete = on_complete
+        self.plan = DispatchPlan(plan_key, len(workers))
         self.channels = [DispatchChannel(q, self.plan.workers_of(q))
                          for q in range(self.plan.n_queues)]
         self.policy: PlacementPolicy = make_policy(placement)
@@ -306,6 +345,13 @@ class Router:
         if cost > 0.0:
             t_end = t + cost
             self.completions.extend(done)
+            if self.on_complete is not None:
+                for c in done:
+                    for arr in self.on_complete(c) or ():
+                        # chained work (a stream's next request) enters
+                        # the fabric no earlier than the completion that
+                        # released it
+                        self._push(max(arr.t_ns, t_end), "arrival", arr)
             self._clock[w] = t_end
             self._wake(w, t_end)      # keep stepping while slots are live
         else:
@@ -352,13 +398,26 @@ class Router:
                              for c in self.channels),
             peak_depths=[c.stats["peak_depth"] for c in self.channels],
             endpoint_usage=self.plan.endpoint_usage(),
+            vector=self.vector,
         )
 
 
-def build_sim_fleet(n_workers: int, category: Category, *,
+def build_sim_fleet(n_workers: int, sharing, *,
                     n_slots: int = 4, placement: str = "round_robin",
                     costs: FabricCosts = FabricCosts()) -> Router:
-    """The bench/test entrypoint: N virtual workers behind a router."""
-    workers = [SimWorker(w, n_slots=n_slots, costs=costs)
+    """The bench/test entrypoint: N virtual workers behind a router.
+
+    ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
+    sharing only, worker slots stay dedicated) or a
+    ``SharingVector``/``EndpointPlan``, whose ``slots`` axis then also
+    keys every worker's pool — the full off-diagonal plan space on the
+    virtual fleet."""
+    slot_level = 1
+    if isinstance(sharing, EndpointPlan):
+        sharing = sharing.vector
+    if isinstance(sharing, SharingVector):
+        slot_level = sharing.slots
+    workers = [SimWorker(w, n_slots=n_slots, costs=costs,
+                         slot_level=slot_level)
                for w in range(n_workers)]
-    return Router(workers, category, placement=placement, costs=costs)
+    return Router(workers, sharing, placement=placement, costs=costs)

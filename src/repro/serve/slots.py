@@ -1,4 +1,4 @@
-"""Slot pools: the paper's endpoint categories applied to KV-cache slots.
+"""Slot pools: the paper's sharing levels applied to KV-cache slots.
 
 The serving translation of Section VI (DESIGN.md §3): a decode slot is the
 communication-resource analogue — a dedicated slot per request is MPI
@@ -6,8 +6,13 @@ everywhere (level-1 sharing: peak throughput, peak footprint), one shared
 wave is MPI+threads (level-4: all requests serialized behind one refill
 barrier), and k-way-shared slot groups are the scalable middle that
 recovers dedicated-level throughput at a fraction of the scheduling
-freedom.  ``Category.level`` (Fig. 4b) drives the group size, so the
-serving pool and the endpoint model stay one abstraction.
+freedom.
+
+Since the plan redesign (DESIGN.md §11) the pool is keyed by a bare
+Fig. 4b sharing **level** — the ``slots`` component of a
+``core.plan.SharingVector`` — so slot sharing can differ from channel or
+executable sharing.  Constructing one from a ``Category`` still works
+(deprecated): the category collapses to its dominant level.
 
 A group admits new requests only when EVERY slot in it has drained — the
 slot-pool analogue of threads contending on a shared uUAR: the wider the
@@ -19,9 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import List, Optional, Sequence
 
 from repro.core.endpoints import (Category, EndpointModel,
+                                  category_for_level, level_group_size,
                                   sharing_group_size)
 
 
@@ -33,18 +40,51 @@ def group_size_for(category: Category, n_slots: int) -> int:
     level 3 (static uUAR sharing)  -> 4 slots/group (the 4 static uUARs)
     level 4 (one shared QP)        -> all slots: static wave batching
 
-    Delegates to ``core.endpoints.sharing_group_size`` — the same mapping
+    Delegates to ``core.endpoints.level_group_size`` — the same mapping
     that sizes the fleet dispatch groups (``core.channels.DispatchPlan``).
     """
     return sharing_group_size(category, n_slots)
 
 
-@dataclasses.dataclass(frozen=True)
-class SlotPool:
-    """Admission policy over ``n_slots`` decode slots for a category."""
+def _coerce_level(level, category, owner: str) -> int:
+    """Shared Category->level shim: explicit ``category=`` (or a Category
+    passed where a level belongs) warns and collapses to its level."""
+    if category is not None and level is not None:
+        raise ValueError(f"{owner}: pass either a sharing level or the "
+                         f"deprecated category=, not both")
+    if category is None and isinstance(level, Category):
+        category, level = level, None
+    if category is not None:
+        warnings.warn(
+            f"{owner}(category=...) is deprecated; pass the Fig. 4b "
+            f"sharing level (category.level) or an EndpointPlan preset "
+            f"(core.plan.EndpointPlan.from_preset({category.value!r}))",
+            DeprecationWarning, stacklevel=3)
+        level = category.level
+    return 1 if level is None else int(level)
 
-    category: Category
+
+@dataclasses.dataclass(frozen=True, init=False)
+class SlotPool:
+    """Admission policy over ``n_slots`` decode slots at one sharing
+    level (the ``slots`` axis of a ``core.plan.SharingVector``)."""
+
+    level: int
     n_slots: int
+
+    def __init__(self, level=None, n_slots: int = 4, *, category=None):
+        object.__setattr__(self, "level",
+                           _coerce_level(level, category, "SlotPool"))
+        object.__setattr__(self, "n_slots", int(n_slots))
+        if not 1 <= self.level <= 4:
+            raise ValueError(f"sharing level must be 1..4, "
+                             f"got {self.level}")
+
+    @property
+    def category(self) -> Category:
+        """The canonical diagonal ``Category`` at this pool's level (the
+        historical report key)."""
+        return category_for_level(self.level)
 
     # cached_property writes straight into the instance __dict__, which
     # sidesteps the frozen dataclass' __setattr__ guard — the pool stays
@@ -53,7 +93,7 @@ class SlotPool:
     # rebuilt as a fresh list-of-ranges each time
     @functools.cached_property
     def group_size(self) -> int:
-        return min(group_size_for(self.category, self.n_slots),
+        return min(level_group_size(self.level, self.n_slots),
                    self.n_slots)
 
     @functools.cached_property

@@ -1,10 +1,11 @@
 """Deterministic mini-hypothesis used when the real package is absent.
 
-The property tests only draw from ``st.integers`` and ``st.sampled_from``;
-this shim replays each ``@given`` test over a fixed, seeded sample of the
-same strategy space so the suite still collects AND exercises the
-properties on a bare interpreter (requirements-dev.txt installs the real
-shrinking engine).  conftest.py installs it into ``sys.modules`` as
+The property tests draw from a small strategy set (``integers``,
+``sampled_from``, ``floats``, ``booleans``, ``none``, ``one_of``,
+``builds``); this shim replays each ``@given`` test over a fixed, seeded
+sample of the same strategy space so the suite still collects AND
+exercises the properties on a bare interpreter (requirements-dev.txt
+installs the real shrinking engine).  conftest.py installs it into ``sys.modules`` as
 ``hypothesis`` / ``hypothesis.strategies`` before collection.
 """
 
@@ -37,6 +38,28 @@ def sampled_from(elements):
     return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
 
 
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def none():
+    return _Strategy(lambda rng: None)
+
+
+def one_of(*strats):
+    return _Strategy(
+        lambda rng: strats[int(rng.integers(len(strats)))].draw(rng))
+
+
+def builds(target, **kw):
+    return _Strategy(
+        lambda rng: target(**{k: s.draw(rng) for k, s in kw.items()}))
+
+
 def given(**strategies_kw):
     def deco(fn):
         @functools.wraps(fn)
@@ -64,3 +87,8 @@ def settings(max_examples: int = 10, deadline=None, **_ignored):
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = integers
 strategies.sampled_from = sampled_from
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.none = none
+strategies.one_of = one_of
+strategies.builds = builds

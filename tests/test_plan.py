@@ -1,0 +1,235 @@
+"""Plan-space invariants (DESIGN.md §11): per-resource sharing vectors,
+the deterministic hint planner, preset round-trips, and footprint
+accounting."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.endpoints import (Category, category_for_level,
+                                  level_group_size, sharing_group_size)
+from repro.core.plan import (EndpointPlan, Hints, PRESETS, RESOURCES,
+                             SharingVector, as_plan, resolve)
+
+LEVELS = st.integers(1, 4)
+
+
+# ----- SharingVector -------------------------------------------------------
+
+def test_vector_validation():
+    for bad in (0, 5, -1, 1.5, "2", True):
+        with pytest.raises(ValueError):
+            SharingVector(slots=bad)
+    v = SharingVector(slots=1, channels=3, execs=4)
+    assert not v.is_diagonal and v.category is None
+
+
+@pytest.mark.parametrize("level", [1, 2, 3, 4])
+def test_diagonal_vectors_and_canonical_categories(level):
+    v = SharingVector.diagonal(level)
+    assert v.is_diagonal
+    assert v.category is category_for_level(level)
+    assert v.category.level == level
+    # group sizes agree with the one Fig. 4b mapping at every axis
+    for r in RESOURCES:
+        assert v.group_size(r, 8) == level_group_size(level, 8)
+
+
+def test_level_group_size_matches_category_mapping():
+    for cat in Category:
+        for n in (1, 2, 3, 4, 8, 16):
+            assert sharing_group_size(cat, n) \
+                == level_group_size(cat.level, n)
+
+
+def test_exec_group_partition():
+    """exec_group_of partitions workers exactly like the dispatch/slot
+    groups: contiguous runs of the group size."""
+    for level in (1, 2, 3, 4):
+        v = SharingVector(execs=level)
+        n = 8
+        gs = level_group_size(level, n)
+        groups = [v.exec_group_of(w, n) for w in range(n)]
+        assert groups == [w // gs for w in range(n)]
+        assert len(set(groups)) == -(-n // gs)
+
+
+# ----- footprint -----------------------------------------------------------
+
+def test_footprint_dedicated_is_unity_and_monotone():
+    assert set(SharingVector.diagonal(1).footprint(8, 8).values()) == {1.0}
+    prev = None
+    for level in (1, 2, 3, 4):
+        score = SharingVector.diagonal(level).footprint_score(8, 8)
+        if prev is not None:
+            assert score < prev          # sharing strictly shrinks it
+        prev = score
+    # fully shared: one group per resource type
+    f = SharingVector.diagonal(4).footprint(8, 8)
+    assert f == {"slots": 1 / 8, "channels": 1 / 8, "execs": 1 / 8}
+
+
+@given(slots=LEVELS, channels=LEVELS, execs=LEVELS,
+       n_workers=st.integers(1, 16), n_slots=st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_footprint_bounds(slots, channels, execs, n_workers, n_slots):
+    v = SharingVector(slots=slots, channels=channels, execs=execs)
+    f = v.footprint(n_workers, n_slots)
+    assert set(f) == set(RESOURCES)
+    for frac in f.values():
+        assert 0.0 < frac <= 1.0
+    assert 0.0 < v.footprint_score(n_workers, n_slots) <= 1.0
+
+
+# ----- planner -------------------------------------------------------------
+
+HINTS = st.builds(
+    Hints,
+    latency_target_ms=st.one_of(st.none(), st.floats(1.0, 5000.0)),
+    burstiness=st.floats(0.0, 1.0),
+    session_ordering=st.booleans(),
+    footprint_budget=st.one_of(st.none(), st.floats(0.2, 1.0)),
+    compile_isolation=st.booleans())
+
+
+@given(hints=HINTS, n_workers=st.integers(1, 16),
+       n_slots=st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_planner_deterministic(hints, n_workers, n_slots):
+    a = resolve(hints, n_workers=n_workers, n_slots=n_slots)
+    b = resolve(hints, n_workers=n_workers, n_slots=n_slots)
+    assert a == b and isinstance(a, SharingVector)
+
+
+@given(t1=st.floats(1.0, 5000.0), t2=st.floats(1.0, 5000.0),
+       burstiness=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_planner_monotone_in_latency_target(t1, t2, burstiness):
+    """A tighter latency target never RAISES any resource's sharing
+    level (budget aside)."""
+    lo, hi = sorted((t1, t2))
+    a = resolve(Hints(latency_target_ms=lo, burstiness=burstiness))
+    b = resolve(Hints(latency_target_ms=hi, burstiness=burstiness))
+    for r in RESOURCES:
+        assert getattr(a, r) <= getattr(b, r)
+
+
+@given(budget=st.floats(0.05, 1.0), n_workers=st.integers(2, 16),
+       n_slots=st.integers(2, 16),
+       latency=st.one_of(st.none(), st.floats(1.0, 5000.0)))
+@settings(max_examples=40, deadline=None)
+def test_planner_respects_footprint_budget(budget, n_workers, n_slots,
+                                           latency):
+    """Whenever ANY vector can meet the budget (the fully shared one),
+    the resolved vector meets it."""
+    floor = SharingVector.diagonal(4).footprint_score(n_workers, n_slots)
+    hints = Hints(latency_target_ms=latency, footprint_budget=budget)
+    got = resolve(hints, n_workers=n_workers, n_slots=n_slots)
+    if budget >= floor:
+        assert got.footprint_score(n_workers, n_slots) <= budget
+    # and the budget never loosens sharing below the unbudgeted resolve
+    free = resolve(dataclasses.replace(hints, footprint_budget=None),
+                   n_workers=n_workers, n_slots=n_slots)
+    for r in RESOURCES:
+        assert getattr(got, r) >= getattr(free, r)
+
+
+def test_planner_hint_directions():
+    """Spot-check the intent mapping: tight latency buys dedicated
+    resources, burstiness shares the dispatch channels, compile isolation
+    dedicates executables."""
+    tight = resolve(Hints(latency_target_ms=10.0))
+    assert (tight.slots, tight.channels) == (1, 1)
+    loose = resolve(Hints(latency_target_ms=4000.0))
+    assert (loose.slots, loose.channels) == (4, 4)
+    bursty = resolve(Hints(latency_target_ms=100.0, burstiness=1.0))
+    calm = resolve(Hints(latency_target_ms=100.0, burstiness=0.0))
+    assert bursty.channels == calm.channels + 1
+    assert bursty.slots == calm.slots
+    assert resolve(Hints(compile_isolation=True)).execs == 1
+    assert resolve(Hints()).execs == 4
+
+
+def test_hints_validation():
+    with pytest.raises(ValueError):
+        Hints(burstiness=1.5)
+    with pytest.raises(ValueError):
+        Hints(latency_target_ms=0.0)
+    with pytest.raises(ValueError):
+        Hints(footprint_budget=0.0)
+
+
+# ----- presets / EndpointPlan ----------------------------------------------
+
+def test_every_preset_round_trips_through_category():
+    assert set(PRESETS) == {c.value for c in Category}
+    for c in Category:
+        plan = EndpointPlan.from_category(c)
+        assert plan.category is c                  # name survives
+        assert plan.vector == SharingVector.diagonal(c.level)
+        assert plan.vector.is_diagonal
+        assert as_plan(c.value).category is c      # str spelling too
+        assert as_plan(c).category is c
+
+
+def test_plan_validation_and_executor_selection():
+    assert EndpointPlan().resolved_executor == "continuous"
+    assert EndpointPlan(n_workers=4).resolved_executor == "fleet"
+    assert EndpointPlan(executor="wave").resolved_executor == "wave"
+    with pytest.raises(ValueError):
+        EndpointPlan(executor="wave", n_workers=2)
+    with pytest.raises(ValueError):
+        EndpointPlan(executor="continuous", n_workers=2)
+    with pytest.raises(ValueError):
+        EndpointPlan(executor="fleet", n_workers=1)
+    with pytest.raises(ValueError):
+        EndpointPlan(executor="warp")
+    with pytest.raises(ValueError):
+        EndpointPlan(n_workers=0)
+    with pytest.raises(ValueError):
+        EndpointPlan(decode_horizon=0)
+    # list buckets normalize to a hashable tuple
+    p = EndpointPlan(prefill_buckets=[8, 16])
+    assert p.prefill_buckets == (8, 16) and hash(p)
+
+
+def test_as_plan_coercions():
+    base = EndpointPlan(n_workers=4)
+    assert as_plan(base) is base
+    assert as_plan(base, n_slots=8).n_slots == 8
+    assert as_plan(None).vector == SharingVector()
+    v = SharingVector(slots=1, channels=3)
+    assert as_plan(v).vector is v
+    h = Hints(latency_target_ms=10.0, session_ordering=True)
+    p = as_plan(h, n_workers=8)
+    assert p.vector.slots == 1 and p.placement == "session_affinity"
+    with pytest.raises(TypeError):
+        as_plan(3.14)
+
+
+def test_dispatch_plan_keeps_exact_category_pricing():
+    """A DispatchPlan built from a Category keeps that category's own
+    Table-1 footprint — DYNAMIC must not silently price as the canonical
+    level-1 category (MPI everywhere)."""
+    from repro.core.channels import DispatchPlan
+    dyn = DispatchPlan(Category.DYNAMIC, 8)
+    assert dyn.level == 1 and dyn.category is Category.DYNAMIC
+    assert dyn.endpoint_usage()["uuars"] < 1.0
+    lvl = DispatchPlan(1, 8)
+    assert lvl.category is Category.MPI_EVERYWHERE
+    assert lvl.endpoint_usage()["uuars"] == 1.0
+    assert dyn == lvl                    # equality stays level-keyed
+    # pricing survives dataclasses.replace (a real, compare-excluded
+    # field, not a stashed attribute)
+    grown = dataclasses.replace(dyn, n_workers=16)
+    assert grown.category is Category.DYNAMIC and grown.n_workers == 16
+
+
+def test_plan_footprint_delegates_to_vector():
+    p = EndpointPlan(vector=SharingVector(slots=1, channels=3, execs=4),
+                     n_workers=8, n_slots=4)
+    assert p.footprint() == p.vector.footprint(8, 4)
+    assert p.footprint_score() == pytest.approx(
+        (1.0 + 2 / 8 + 1 / 8) / 3)
+    assert [p.exec_group_of(w) for w in range(8)] == [0] * 8

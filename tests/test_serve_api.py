@@ -1,0 +1,367 @@
+"""The `serve.connect` facade (DESIGN.md §11): plan-selected executors,
+bit-identity across plans (diagonal presets ≡ the deprecated Category
+paths, K ∈ {1, 8}, fleet sizes {1, 4}), an off-diagonal vector exercised
+end-to-end, stream FIFO/concurrency semantics, exec-group sharing, and
+the backward-compat shims."""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.configs import get_smoke_config
+from repro.core.endpoints import Category
+from repro.core.plan import EndpointPlan, Hints, SharingVector
+from repro.models.model import Model
+from repro.serve.engine import ContinuousEngine, Request, _shared_steps
+from repro.serve.fabric import EngineWorker, Router
+from repro.serve.fabric.traffic import Arrival
+
+
+@functools.lru_cache(maxsize=None)
+def _served():
+    cfg = get_smoke_config("qwen2-0.5b")
+    return cfg, Model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _reqs(n=5, seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, 100,
+                          size=int(rng.integers(3, 13))).astype(np.int32),
+             int(rng.integers(2, 5)))
+            for _ in range(n)]
+
+
+@functools.lru_cache(maxsize=None)
+def _expected_key(n=5, seed=7):
+    """Solo-oracle outputs, keyed by request index — what EVERY plan must
+    produce for the same prompts."""
+    cfg, params = _served()
+    out = []
+    for prompt, max_new in _reqs(n, seed):
+        eng = ContinuousEngine(cfg, params, n_slots=1, max_len=64)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=max_new))
+        out.append(eng.run()[0].output)
+    return out
+
+
+def _run_client(plan_spec, **overrides):
+    cfg, params = _served()
+    client = serve.connect(cfg, plan_spec, params=params, **overrides)
+    rids = [client.submit(p, max_new_tokens=m) for p, m in _reqs()]
+    out = client.run()
+    return [out[r] for r in rids], client
+
+
+# ----- bit-identity across the plan space ---------------------------------
+
+@pytest.mark.parametrize("horizon", [1, 8])
+@pytest.mark.parametrize("preset", ["mpi_everywhere", "shared_dynamic",
+                                    "mpi_threads"])
+def test_diagonal_presets_match_old_single_engine(preset, horizon):
+    """fleet size 1: every diagonal preset through connect() produces
+    exactly the tokens of the deprecated ContinuousEngine(category=...)
+    path, which in turn match the solo oracle — for K in {1, 8}."""
+    cfg, params = _served()
+    got, _ = _run_client(preset, n_slots=3, max_len=64,
+                         decode_horizon=horizon)
+    with pytest.deprecated_call():
+        old = ContinuousEngine(cfg, params, n_slots=3, max_len=64,
+                               category=Category(preset),
+                               decode_horizon=horizon)
+    for i, (p, m) in enumerate(_reqs()):
+        old.submit(Request(rid=i, prompt=p, max_new_tokens=m))
+    old_out = {r.rid: r.output for r in old.run()}
+    assert got == [old_out[i] for i in range(len(got))]
+    assert got == _expected_key()
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_diagonal_preset_matches_old_fleet(horizon):
+    """fleet size 4: the mpi_threads preset through connect() serves
+    exactly the tokens the pre-facade Router-of-EngineWorkers path
+    serves, which match the solo oracle — for K in {1, 8}."""
+    cfg, params = _served()
+    reqs = _reqs()
+    got, client = _run_client("mpi_threads", n_workers=4, n_slots=2,
+                              max_len=64, decode_horizon=horizon)
+    assert client.report.n_completed == len(reqs)
+
+    # the pre-facade spelling, fed the same prompts by rid
+    def request_fn(a: Arrival) -> Request:
+        p, m = reqs[a.rid]
+        return Request(rid=a.rid, prompt=p, max_new_tokens=m)
+
+    workers = [EngineWorker(w, ContinuousEngine(
+                   cfg, params, n_slots=2, max_len=64,
+                   decode_horizon=horizon),
+                   request_fn=request_fn)
+               for w in range(4)]
+    router = Router(workers, Category.MPI_THREADS)
+    rep = router.run([Arrival(rid=i, t_ns=0.0, prompt_len=len(p),
+                              max_new_tokens=m)
+                      for i, (p, m) in enumerate(reqs)])
+    old_out = {c.rid: c.output for c in rep.completions}
+    assert got == [old_out[i] for i in range(len(got))]
+    assert got == _expected_key()
+
+
+def test_shared_dynamic_fleet_matches_oracle():
+    """The level-2 diagonal at fleet size 4 (two exec groups: the execs
+    axis actually splits the compiled sets) still serves oracle-identical
+    tokens."""
+    got, client = _run_client("shared_dynamic", n_workers=4, n_slots=2,
+                              max_len=64)
+    assert got == _expected_key()
+    groups = {client.plan.exec_group_of(w) for w in range(4)}
+    assert groups == {0, 1}
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_off_diagonal_vector_end_to_end(horizon):
+    """THE newly reachable point: dedicated slots + 4-way-shared channels
+    (slots level != channels level), served end-to-end through
+    ServeClient at fleet size 4 — tokens stay oracle-identical while the
+    fabric runs one dispatch queue and every worker pool stays
+    continuous."""
+    vec = SharingVector(slots=1, channels=3, execs=4)
+    got, client = _run_client(vec, n_workers=4, n_slots=2, max_len=64,
+                              decode_horizon=horizon)
+    assert got == _expected_key()
+    rep = client.report
+    assert rep.vector == vec and not vec.is_diagonal
+    assert rep.n_completed == len(got)
+    # channels level 3 -> groups of 4 -> ONE queue for 4 workers...
+    assert len(rep.peak_depths) == 1
+    # ...while decode slots stay dedicated (continuous batching)
+    assert all(w.engine.pool.level == 1 for w in client.workers)
+    # and the plan prices below the all-dedicated footprint
+    assert client.plan.footprint_score() < 1.0
+
+
+def test_hints_resolve_through_connect():
+    """Intent in, resolved plan out: a tight latency target buys the
+    dedicated diagonal; session ordering flips placement."""
+    cfg, params = _served()
+    client = serve.connect(
+        cfg, Hints(latency_target_ms=10.0, session_ordering=True),
+        params=params, n_slots=2, max_len=64)
+    assert client.plan.vector.slots == 1
+    assert client.plan.placement == "session_affinity"
+    out = client.generate([p for p, _ in _reqs()][:2], max_new_tokens=3)
+    assert all(len(t) == 3 for t in out)
+
+
+def test_wave_executor_and_stream_refusal():
+    cfg, params = _served()
+    client = serve.connect(cfg, None, params=params, executor="wave",
+                           n_slots=2, max_len=64)
+    rids = [client.submit(p, max_new_tokens=m) for p, m in _reqs()]
+    out = client.run()
+    # wave scheduling changes timing, not values
+    assert [out[r] for r in rids] == _expected_key()
+    with pytest.raises(ValueError):
+        client.stream()
+
+
+def test_wave_executor_truncates_at_cache_budget():
+    """The wave engine's legacy cache-edge truncation survives the
+    facade: a prompt at max_len is served (budget 0 -> the single
+    lookahead token), not rejected."""
+    cfg, params = _served()
+    client = serve.connect(cfg, None, params=params, executor="wave",
+                           n_slots=1, max_len=16)
+    rid = client.submit(np.arange(1, 17), max_new_tokens=8)
+    out = client.run()
+    assert len(out[rid]) >= 1
+
+
+def test_scalar_router_spelling_claims_no_vector():
+    """A Router keyed by a bare Category prices that category and leaves
+    FleetReport.vector None — the fabric never owned the slot/exec axes,
+    so the report must not fabricate them."""
+    from repro.serve.fabric import build_sim_fleet, bursty_trace
+    rep = build_sim_fleet(4, Category.DYNAMIC).run(
+        bursty_trace(8, burst_size=4, seed=0))
+    assert rep.vector is None
+    assert rep.category is Category.DYNAMIC
+    assert rep.endpoint_usage["uuars"] < 1.0
+    vec = SharingVector(slots=1, channels=2)
+    rep = build_sim_fleet(4, vec).run(
+        bursty_trace(8, burst_size=4, seed=0))
+    assert rep.vector == vec
+
+
+# ----- stream semantics ----------------------------------------------------
+
+def test_stream_fifo_single_engine():
+    """Within a stream, requests retire in submission order even when a
+    later request is much shorter; across streams the engine interleaves
+    (cross-stream concurrency)."""
+    cfg, params = _served()
+    client = serve.connect(cfg, "mpi_everywhere", params=params,
+                           n_slots=4, max_len=64)
+    a = client.stream("a")
+    b = client.stream("b")
+    prompts = _reqs(6, seed=3)
+    ra = [a.submit(prompts[i][0], max_new_tokens=n)
+          for i, n in [(0, 8), (1, 2), (2, 2)]]
+    rb = [b.submit(prompts[i][0], max_new_tokens=n)
+          for i, n in [(3, 3), (4, 3)]]
+    free = client.submit(prompts[5][0], max_new_tokens=2)
+    out = client.run()
+    eng = client.engine
+    # FIFO per stream: retire order follows submission order
+    for rids in (ra, rb):
+        retire = [eng.retire_steps[r] for r in rids]
+        assert retire == sorted(retire) and len(set(retire)) == len(retire)
+    # cross-stream concurrency: stream b finished its head while stream
+    # a's long head still decoded
+    assert eng.retire_steps[rb[0]] < eng.retire_steps[ra[0]]
+    # ordering moved tokens in time, not in value
+    for r in ra + rb + [free]:
+        solo = ContinuousEngine(cfg, params, n_slots=1, max_len=64)
+        p = client._requests[r]
+        solo.submit(Request(rid=0, prompt=p.prompt,
+                            max_new_tokens=p.max_new_tokens))
+        assert out[r] == solo.run()[0].output
+    assert a.outputs == [out[r] for r in ra]
+
+
+def test_stream_fifo_fleet():
+    """Fleet mode: a stream's requests complete in submission order (the
+    router's on_complete chaining), unordered traffic interleaves."""
+    cfg, params = _served()
+    client = serve.connect(cfg, "shared_dynamic", params=params,
+                           n_workers=2, n_slots=2, max_len=64)
+    s = client.stream()
+    prompts = _reqs(6, seed=11)
+    chained = [s.submit(p, max_new_tokens=m) for p, m in prompts[:3]]
+    loose = [client.submit(p, max_new_tokens=m) for p, m in prompts[3:]]
+    out = client.run()
+    assert set(out) == set(chained + loose)
+    rep = client.report
+    done_at = {c.rid: c.t_done_ns for c in rep.completions}
+    times = [done_at[r] for r in chained]
+    assert times == sorted(times)
+    # chaining is real: request i+1 did not even ARRIVE at the fabric
+    # before i finished (arrival = completion - latency)
+    for a, b in zip(chained, chained[1:]):
+        assert done_at[b] - rep.latency_ns[b] >= done_at[a]
+    assert s.outputs == [out[r] for r in chained]
+
+
+def test_client_accumulates_across_runs():
+    cfg, params = _served()
+    client = serve.connect(cfg, "mpi_everywhere", params=params,
+                           n_slots=2, max_len=64)
+    (p1, m1), (p2, m2) = _reqs(2, seed=5)
+    r1 = client.submit(p1, max_new_tokens=m1)
+    first = client.run()
+    r2 = client.submit(p2, max_new_tokens=m2)
+    second = client.run()
+    assert set(first) == {r1} and set(second) == {r2}
+    assert set(client.results) == {r1, r2}
+    client.close()
+    with pytest.raises(RuntimeError):
+        client.submit(p1)
+    with pytest.raises(RuntimeError):
+        client.run()
+
+
+def test_submit_validation():
+    cfg, params = _served()
+    client = serve.connect(cfg, None, params=params, n_slots=2,
+                           max_len=16)
+    with pytest.raises(ValueError):
+        client.submit(np.arange(1, 20))          # exceeds max_len
+    with pytest.raises(ValueError):
+        client.submit(np.zeros((2, 2), np.int32))
+    other = serve.connect(cfg, None, params=params, n_slots=2, max_len=16)
+    with pytest.raises(ValueError):
+        client.submit(np.arange(1, 4), stream=other.stream())
+    with pytest.raises(ValueError):
+        serve.connect(cfg, None, params=params, placement="nope")
+
+
+# ----- exec-group sharing (the execs axis) ---------------------------------
+
+def test_exec_groups_split_compiled_steps():
+    """Level-4 exec sharing keys every worker to ONE compiled step set
+    (the historical behavior); level 1 gives each worker a private set.
+    Identity is checked on a config private to this test, so no extra
+    compilation actually runs."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), d_ff=80)
+    assert _shared_steps(cfg, False, 0) is _shared_steps(cfg, False)
+    assert _shared_steps(cfg, False, 0) is not _shared_steps(cfg, False, 1)
+
+    params = None      # engines never run here; params unused
+    shared = [ContinuousEngine(cfg, params, n_slots=2, max_len=32,
+                               plan=EndpointPlan(
+                                   vector=SharingVector(execs=4),
+                                   n_workers=4, n_slots=2, max_len=32),
+                               exec_group=SharingVector(
+                                   execs=4).exec_group_of(w, 4))
+              for w in range(4)]
+    assert len({id(e._decode) for e in shared}) == 1
+    private = [ContinuousEngine(cfg, params, n_slots=2, max_len=32,
+                                exec_group=SharingVector(
+                                    execs=1).exec_group_of(w, 4))
+               for w in range(4)]
+    assert len({id(e._decode) for e in private}) == 4
+
+
+# ----- backward-compat shims -----------------------------------------------
+
+def test_deprecated_spellings_warn_and_translate():
+    cfg, params = _served()
+    with pytest.deprecated_call():
+        pool = serve.SlotPool(category=Category.STATIC, n_slots=8)
+    assert pool.level == 3
+    with pytest.deprecated_call():
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_len=64,
+                               category=Category.SHARED_DYNAMIC)
+    assert eng.pool.level == 2
+    assert eng.plan.vector.slots == 2
+    with pytest.raises(ValueError):
+        serve.SlotPool(2, 4, category=Category.STATIC)   # both spellings
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params, slot_level=0)      # not coerced
+
+
+def test_legacy_launcher_flags_translate_to_presets():
+    """The old flag surface builds the equivalent preset plan (with the
+    deprecation warning) — old-path ≡ new-path is then the engine-level
+    identity the tests above pin."""
+    from repro.launch.serve import build_plan
+    import argparse
+
+    ap = argparse.ArgumentParser()     # only .error is exercised
+    args = argparse.Namespace(
+        plan=None, hint=[], engine="continuous", category="shared_dynamic",
+        workers=4, slots=3, max_len=128, decode_horizon=2,
+        prefill_buckets="auto", ragged_kernel=False,
+        placement="least_loaded")
+    with pytest.deprecated_call():
+        plan = build_plan(args, ap)
+    assert plan.category is Category.SHARED_DYNAMIC
+    assert plan.vector == SharingVector.diagonal(2)
+    assert (plan.n_workers, plan.n_slots, plan.max_len) == (4, 3, 128)
+    assert plan.decode_horizon == 2
+    assert plan.placement == "least_loaded"
+    assert plan.resolved_executor == "fleet"
+
+    args.category, args.workers, args.engine = None, 1, None
+    legacy_default = build_plan(args, ap)
+    assert legacy_default.resolved_executor == "wave"
+    assert legacy_default.category is Category.MPI_EVERYWHERE
+
+    # hints resolve their own placement unless --placement pins one
+    args.engine, args.placement = None, None
+    args.hint = ["session_ordering=true"]
+    assert build_plan(args, ap).placement == "session_affinity"
+    args.placement = "least_loaded"
+    assert build_plan(args, ap).placement == "least_loaded"

@@ -34,13 +34,13 @@ def _solo(cfg, params, req: Request) -> list:
 # ----- SlotPool policy (pure host logic) ---------------------------------
 
 def test_pool_group_sizes_follow_sharing_levels():
-    assert SlotPool(Category.MPI_EVERYWHERE, 8).group_size == 1
-    assert SlotPool(Category.DYNAMIC, 8).group_size == 1
-    assert SlotPool(Category.SHARED_DYNAMIC, 8).group_size == 2
-    assert SlotPool(Category.STATIC, 8).group_size == 4
-    assert SlotPool(Category.MPI_THREADS, 8).group_size == 8
+    assert SlotPool(Category.MPI_EVERYWHERE.level, 8).group_size == 1
+    assert SlotPool(Category.DYNAMIC.level, 8).group_size == 1
+    assert SlotPool(Category.SHARED_DYNAMIC.level, 8).group_size == 2
+    assert SlotPool(Category.STATIC.level, 8).group_size == 4
+    assert SlotPool(Category.MPI_THREADS.level, 8).group_size == 8
     # group size never exceeds the pool
-    assert SlotPool(Category.MPI_THREADS, 3).group_size == 3
+    assert SlotPool(Category.MPI_THREADS.level, 3).group_size == 3
 
 
 LEVEL_GROUPS = {1: 1, 2: 2, 3: 4}      # level 4 -> all slots
@@ -52,9 +52,11 @@ def test_pool_group_size_mapping_exhaustive(category, n_slots):
     """Every Category.level x pool size: group size is the level's Fig. 4b
     share width clamped to the pool."""
     expect = LEVEL_GROUPS.get(category.level, n_slots)
-    assert SlotPool(category, n_slots).group_size == min(expect, n_slots)
+    assert SlotPool(category.level, n_slots).group_size \
+        == min(expect, n_slots)
     # groups tile the pool exactly once
-    tiles = [i for g in SlotPool(category, n_slots).groups for i in g]
+    tiles = [i for g in SlotPool(category.level, n_slots).groups
+             for i in g]
     assert tiles == list(range(n_slots))
 
 
@@ -62,7 +64,7 @@ def test_pool_admissible_empty_queue_short_circuits():
     """With nothing waiting, admissible() answers [] immediately instead
     of walking the groups (the engine would otherwise re-scan them every
     decode step)."""
-    pool = SlotPool(Category.SHARED_DYNAMIC, 8)
+    pool = SlotPool(Category.SHARED_DYNAMIC.level, 8)
     assert pool.admissible([False] * 8, queue_len=0) == []
     # and the answer is bounded by what is actually waiting
     assert pool.admissible([False] * 8, queue_len=3) == [0, 1, 2]
@@ -70,15 +72,15 @@ def test_pool_admissible_empty_queue_short_circuits():
 
 
 def test_pool_dedicated_admits_any_free_slot():
-    pool = SlotPool(Category.MPI_EVERYWHERE, 4)
+    pool = SlotPool(Category.MPI_EVERYWHERE.level, 4)
     assert pool.admissible([True, False, True, False]) == [1, 3]
 
 
 def test_pool_shared_requires_drained_group():
-    pool = SlotPool(Category.SHARED_DYNAMIC, 4)       # groups {0,1} {2,3}
+    pool = SlotPool(Category.SHARED_DYNAMIC.level, 4)  # groups {0,1} {2,3}
     assert pool.admissible([True, False, False, False]) == [2, 3]
     assert pool.admissible([False, False, False, False]) == [0, 1, 2, 3]
-    pool = SlotPool(Category.MPI_THREADS, 4)          # one wave
+    pool = SlotPool(Category.MPI_THREADS.level, 4)     # one wave
     assert pool.admissible([False, False, False, True]) == []
 
 
@@ -110,7 +112,7 @@ def test_mixed_lengths_admitted_mid_decode(served):
     decoding — and every output still matches the solo run."""
     cfg, params = served
     eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
-                           category=Category.MPI_EVERYWHERE)
+                           slot_level=Category.MPI_EVERYWHERE.level)
     reqs = [Request(rid=0, prompt=_prompt(8), max_new_tokens=3),
             Request(rid=1, prompt=_prompt(16), max_new_tokens=9),
             Request(rid=2, prompt=_prompt(12), max_new_tokens=3)]
@@ -131,7 +133,7 @@ def test_same_step_admit_and_finish_frees_slot(served):
     cfg, params = served
     for cat in (Category.MPI_EVERYWHERE, Category.MPI_THREADS):
         eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
-                               category=cat)
+                               slot_level=cat.level)
         reqs = [Request(rid=i, prompt=_prompt(8, start=1 + i),
                         max_new_tokens=1) for i in range(5)]
         for r in reqs:
@@ -185,7 +187,7 @@ def test_wave_and_continuous_equivalent(served, category):
     expect = {r.rid: r.output for r in wave.run()}
 
     eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
-                           category=category)
+                           slot_level=category.level)
     for r in reqs():
         eng.submit(r)
     done = eng.run()
@@ -208,7 +210,7 @@ def test_occupancy_orders_with_sharing(served):
     occ = {}
     for cat in (Category.MPI_EVERYWHERE, Category.MPI_THREADS):
         eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
-                               category=cat)
+                               slot_level=cat.level)
         for r in reqs():
             eng.submit(r)
         eng.run()

@@ -57,11 +57,11 @@ def _clone(reqs):
             for r in reqs]
 
 
-def _run(reqs, horizon, *, category=Category.MPI_EVERYWHERE,
+def _run(reqs, horizon, *, slot_level=1,
          buckets="auto", n_slots=3, max_len=48):
     cfg, params = _served()
     eng = ContinuousEngine(cfg, params, n_slots=n_slots, max_len=max_len,
-                           category=category, decode_horizon=horizon,
+                           slot_level=slot_level, decode_horizon=horizon,
                            prefill_buckets=buckets)
     for r in _clone(reqs):
         eng.submit(r)
@@ -82,7 +82,7 @@ def test_horizon_equivalence_property(seed, n):
     for category in LEVELS:
         base = None
         for horizon in (1, 4, 16):
-            done, eng = _run(reqs, horizon, category=category,
+            done, eng = _run(reqs, horizon, slot_level=category.level,
                              n_slots=n_slots)
             key = (done, eng.admit_order)
             if base is None:
@@ -217,13 +217,13 @@ def test_wave_engine_shares_executables():
 def test_slot_pool_groups_memoized():
     """groups (walked every admissible() call) is computed once per pool
     and the frozen dataclass stays externally immutable."""
-    pool = SlotPool(Category.SHARED_DYNAMIC, 8)
+    pool = SlotPool(Category.SHARED_DYNAMIC.level, 8)
     assert pool.groups is pool.groups
     assert pool.group_size == 2
     with pytest.raises(dataclasses.FrozenInstanceError):
         pool.n_slots = 4
     # equality/hash still follow the fields, not the cache
-    assert pool == SlotPool(Category.SHARED_DYNAMIC, 8)
+    assert pool == SlotPool(Category.SHARED_DYNAMIC.level, 8)
 
 
 # ----- fabric accounting ---------------------------------------------------

@@ -43,7 +43,7 @@ CANDIDATE = SharingVector(slots=1, channels=3, execs=4)
 
 
 def _label(v: SharingVector) -> str:
-    return f"s{v.slots}c{v.channels}e{v.execs}"
+    return v.label
 
 
 def run_one(vector: SharingVector, trace):

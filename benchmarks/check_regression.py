@@ -1,0 +1,205 @@
+"""Bench regression gate: freshly emitted BENCH_*.json vs committed
+baselines (DESIGN.md §12).
+
+The serving benches emit machine-readable rows
+(``benchmarks.common.write_bench_json``); this gate compares them
+against the baselines committed under ``benchmarks/baselines/`` and
+fails (exit 1) on regression, so CI catches a perf or footprint slide
+the moment it lands instead of three PRs later.
+
+Comparison policy — rows matched by their full ``config`` dict:
+
+* **virtual-time benches** (fabric, plan, adapt) are deterministic pure
+  arithmetic: ``tok_per_s`` and ``p99_ms`` gate inside a tolerance band
+  (default ±10%, regressions only — a fresh IMPROVEMENT never fails),
+  footprint fields near-exactly;
+* **wall-clock benches** (serve) vary with host hardware, so their
+  ``tok_per_s`` gates only when ``--wall-tolerance`` is set (> 0);
+  their *structural* metrics — tokens, decode steps, host syncs,
+  dispatch/compile counts — are hardware-independent and gate tightly;
+* a baseline row MISSING from the fresh emission fails (coverage
+  regression); fresh rows without a baseline pass with a note (new
+  configs are fine until ``--update`` re-baselines);
+* acceptance flags must stay truthy.
+
+Usage (CI runs exactly this after the bench step):
+
+  PYTHONPATH=src:. python -m benchmarks.check_regression \
+      --fresh-dir bench-artifacts
+  # re-baseline after an intentional perf change:
+  PYTHONPATH=src:. python -m benchmarks.check_regression \
+      --fresh-dir bench-artifacts --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+#: bench name -> deterministic in virtual time (gate perf metrics) or
+#: wall-clock (gate structure only, unless --wall-tolerance).
+VIRTUAL_TIME = {"fabric", "plan", "adapt"}
+
+#: metric -> (direction, kind).  direction: which way is WORSE ("either"
+#: gates both ways).  kind "perf" gates per the bench's time domain;
+#: "struct" and "exact" always gate, within --struct-tolerance, in the
+#: worse direction only; "flag" must stay truthy.
+GATES: Dict[str, Tuple[str, str]] = {
+    "tok_per_s": ("lower", "perf"),
+    "p50_ms": ("higher", "perf"),
+    "p99_ms": ("higher", "perf"),
+    "mean_footprint": ("higher", "exact"),
+    "footprint": ("higher", "exact"),
+    "tokens": ("either", "struct"),
+    "completed": ("either", "struct"),
+    "decode_steps": ("either", "struct"),
+    "decode_calls": ("either", "struct"),
+    "prefill_calls": ("either", "struct"),
+    "host_syncs": ("either", "struct"),
+    "host_syncs_per_token": ("higher", "struct"),
+    "compiles_admit": ("higher", "struct"),
+    "compiles_prefill_exact": ("higher", "struct"),
+    "compiles_horizon": ("higher", "struct"),
+    "acceptance": ("flag", "flag"),
+}
+
+
+def _key(row: dict) -> str:
+    return json.dumps(row.get("config", {}), sort_keys=True)
+
+
+def _load(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {_key(r): r.get("metrics", {}) for r in data.get("rows", [])}
+
+
+def _violates(direction: str, base: float, fresh: float,
+              tol: float) -> bool:
+    """True when ``fresh`` regresses past the tolerance band."""
+    if direction == "either":
+        return abs(fresh - base) > tol * max(abs(base), 1e-12) + 1e-9
+    scale = max(abs(base), 1e-12)
+    if direction == "lower":          # lower is worse (throughput)
+        return fresh < base - tol * scale - 1e-9
+    return fresh > base + tol * scale + 1e-9      # higher is worse
+
+
+def compare_rows(name: str, base: dict, fresh: dict, *,
+                 tolerance: float, wall_tolerance: float,
+                 struct_tolerance: float) -> List[str]:
+    """-> list of violation strings for one (baseline, fresh) row pair."""
+    virtual = name in VIRTUAL_TIME
+    problems = []
+    for metric, (direction, kind) in GATES.items():
+        if metric not in base or metric not in fresh:
+            continue
+        b, f = base[metric], fresh[metric]
+        if kind == "flag":
+            if bool(b) and not bool(f):
+                problems.append(f"{metric}: acceptance flipped "
+                                f"{b!r} -> {f!r}")
+            continue
+        if kind == "perf":
+            tol = tolerance if virtual else wall_tolerance
+            if tol <= 0:
+                continue              # wall-clock perf ungated by default
+        else:
+            tol = struct_tolerance
+        if _violates(direction, float(b), float(f), tol):
+            problems.append(f"{metric}: baseline {b:.6g} -> fresh "
+                            f"{f:.6g} (worse-direction={direction}, "
+                            f"tol={tol:g})")
+    return problems
+
+
+def compare_files(name: str, base_path: str, fresh_path: str,
+                  **tols) -> Tuple[List[str], int, int]:
+    """-> (violations, rows compared, fresh-only rows)."""
+    base, fresh = _load(base_path), _load(fresh_path)
+    violations = []
+    for key, metrics in base.items():
+        if key not in fresh:
+            violations.append(f"row missing from fresh emission: {key}")
+            continue
+        for p in compare_rows(name, metrics, fresh[key], **tols):
+            violations.append(f"{key}: {p}")
+    return violations, len(base.keys() & fresh.keys()), \
+        len(fresh.keys() - base.keys())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--fresh-dir",
+                    default=os.environ.get("BENCH_OUT_DIR", "."))
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative band for virtual-time perf metrics "
+                         "(tok_per_s/p50/p99; regressions only)")
+    ap.add_argument("--wall-tolerance", type=float, default=0.0,
+                    help="relative band for WALL-CLOCK perf metrics; 0 "
+                         "(default) skips them — CI hardware varies")
+    ap.add_argument("--struct-tolerance", type=float, default=0.02,
+                    help="relative band for structural/footprint "
+                         "metrics (token counts, sync counts, compile "
+                         "counts, footprint fractions)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh files over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        # before the baseline guard: --update is also the bootstrap path
+        # into a missing or empty baseline dir
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for name in sorted(
+                f for f in os.listdir(args.fresh_dir)
+                if f.startswith("BENCH_") and f.endswith(".json")):
+            shutil.copy(os.path.join(args.fresh_dir, name),
+                        os.path.join(args.baseline_dir, name))
+            print(f"re-baselined {name}")
+        return 0
+
+    names = sorted(
+        f[len("BENCH_"):-len(".json")]
+        for f in os.listdir(args.baseline_dir)
+        if f.startswith("BENCH_") and f.endswith(".json"))
+    if not names:
+        print(f"no baselines under {args.baseline_dir}", file=sys.stderr)
+        return 2
+
+    tols = dict(tolerance=args.tolerance,
+                wall_tolerance=args.wall_tolerance,
+                struct_tolerance=args.struct_tolerance)
+    failed = False
+    for name in names:
+        base_path = os.path.join(args.baseline_dir, f"BENCH_{name}.json")
+        fresh_path = os.path.join(args.fresh_dir, f"BENCH_{name}.json")
+        if not os.path.exists(fresh_path):
+            print(f"FAIL {name}: fresh {fresh_path} not found "
+                  f"(bench not run?)")
+            failed = True
+            continue
+        violations, compared, fresh_only = compare_files(
+            name, base_path, fresh_path, **tols)
+        domain = "virtual-time" if name in VIRTUAL_TIME else "wall-clock"
+        if violations:
+            failed = True
+            print(f"FAIL {name} ({domain}, {compared} rows):")
+            for v in violations:
+                print(f"  {v}")
+        else:
+            extra = f", {fresh_only} new" if fresh_only else ""
+            print(f"PASS {name} ({domain}, {compared} rows{extra})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,7 @@ BENCHES = [
     "bench_serve_continuous",
     "bench_fabric",
     "bench_plan_space",
+    "bench_adaptive",
     "roofline",
 ]
 

@@ -7,6 +7,7 @@ channel abstraction that carries the endpoint model into JAX collective
 scheduling (channels.py).
 """
 
+from repro.core.adapt import Replanner, WindowStats
 from repro.core.endpoints import (Category, EndpointModel, ThreadPath,
                                   build_cq_shared, build_ctx_shared,
                                   build_qp_shared, category_for_level,
@@ -19,7 +20,8 @@ from repro.core.resources import (ResourceUsage, TDSharing,
 
 __all__ = [
     "Category", "EndpointModel", "EndpointPlan", "Hints", "PRESETS",
-    "ResourceUsage", "SharingVector", "TDSharing", "ThreadPath", "as_plan",
+    "Replanner", "ResourceUsage", "SharingVector", "TDSharing",
+    "ThreadPath", "WindowStats", "as_plan",
     "build_cq_shared", "build_ctx_shared", "build_qp_shared",
     "category_for_level", "level_group_size", "naive_td_per_ctx_usage",
     "paper_categories", "resolve", "sharing_group_size",

@@ -93,6 +93,12 @@ class SharingVector:
         return self.slots == self.channels == self.execs
 
     @property
+    def label(self) -> str:
+        """The compact ``s{slots}c{channels}e{execs}`` tag every bench
+        row, launcher line, and migration trace prints."""
+        return f"s{self.slots}c{self.channels}e{self.execs}"
+
+    @property
     def category(self) -> Optional[Category]:
         """The canonical ``Category`` of a diagonal vector (None for the
         newly reachable off-diagonal plans)."""
@@ -192,6 +198,26 @@ def _latency_level(target_ms: Optional[float]) -> int:
     return 4
 
 
+def fit_budget(vec: SharingVector, budget: Optional[float], *,
+               n_workers: int = 1, n_slots: int = 4) -> SharingVector:
+    """Raise sharing levels — execs, then channels, then slots, the one
+    bump order — until the vector's footprint fits ``budget`` (or it is
+    fully shared).  THE budget loop: the static planner (``resolve``)
+    and the live controller (``core.adapt.Replanner``) both clamp
+    through here, so a hand-built starting vector obeys the budget
+    exactly like a planned one."""
+    if budget is None:
+        return vec
+    while vec.footprint_score(n_workers, n_slots) > budget:
+        for r in RESOURCES:           # execs -> channels -> slots
+            if getattr(vec, r) < 4:
+                vec = dataclasses.replace(vec, **{r: getattr(vec, r) + 1})
+                break
+        else:
+            break                     # fully shared: nothing left to give
+    return vec
+
+
 def resolve(hints: Hints, *, n_workers: int = 1,
             n_slots: int = 4) -> SharingVector:
     """Deterministically map intent to a ``SharingVector``.
@@ -207,17 +233,8 @@ def resolve(hints: Hints, *, n_workers: int = 1,
     channels = min(4, base + (1 if hints.burstiness >= 0.5 else 0))
     vec = SharingVector(slots=base, channels=channels,
                         execs=1 if hints.compile_isolation else 4)
-    if hints.footprint_budget is not None:
-        while vec.footprint_score(n_workers, n_slots) \
-                > hints.footprint_budget:
-            for r in RESOURCES:       # execs -> channels -> slots
-                if getattr(vec, r) < 4:
-                    vec = dataclasses.replace(
-                        vec, **{r: getattr(vec, r) + 1})
-                    break
-            else:
-                break                 # fully shared: nothing left to give
-    return vec
+    return fit_budget(vec, hints.footprint_budget,
+                      n_workers=n_workers, n_slots=n_slots)
 
 
 Buckets = Union[None, str, Tuple[int, ...]]
@@ -244,6 +261,12 @@ class EndpointPlan:
     placement: str = "round_robin"
     executor: str = "auto"            # auto | continuous | wave | fleet
     preset: Optional[str] = None      # source Category value, if any
+    # ----- online adaptation (core.adapt.Replanner, DESIGN.md §12) -------
+    adaptive: bool = False            # live re-planning under traffic
+    adapt_window_ns: float = 250_000.0    # telemetry window (virtual ns)
+    adapt_budget: Optional[float] = None  # Hints.footprint_budget carried
+    #                                       through so the live controller
+    #                                       honors the same ceiling
 
     def __post_init__(self):
         if isinstance(self.prefill_buckets, list):
@@ -255,6 +278,11 @@ class EndpointPlan:
             raise ValueError("a plan needs at least one slot")
         if self.decode_horizon < 1:
             raise ValueError("decode_horizon must be >= 1")
+        if self.adapt_window_ns <= 0:
+            raise ValueError("adapt_window_ns must be positive")
+        if self.adaptive and self.executor == "wave":
+            raise ValueError("the wave executor cannot re-plan live; "
+                             "adaptive plans need continuous or fleet")
         if self.executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}, "
                              f"got {self.executor!r}")
@@ -287,6 +315,10 @@ class EndpointPlan:
         vec = resolve(hints, n_workers=n_workers, n_slots=n_slots)
         if hints.session_ordering:
             overrides.setdefault("placement", "session_affinity")
+        if hints.footprint_budget is not None:
+            # an adaptive run keeps honoring the same ceiling the planner
+            # resolved under (core.adapt.Replanner budget cap)
+            overrides.setdefault("adapt_budget", hints.footprint_budget)
         return cls(vector=vec, **overrides)
 
     # ----- derived -------------------------------------------------------
@@ -341,6 +373,6 @@ def as_plan(spec, **overrides) -> EndpointPlan:
 
 
 __all__ = [
-    "RESOURCES", "SharingVector", "Hints", "resolve", "EndpointPlan",
-    "PRESETS", "as_plan", "Buckets",
+    "RESOURCES", "SharingVector", "Hints", "fit_budget", "resolve",
+    "EndpointPlan", "PRESETS", "as_plan", "Buckets",
 ]

@@ -31,8 +31,8 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.endpoints import Category
 from repro.core.plan import EndpointPlan, Hints, SharingVector
 from repro.serve import connect
-from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, poisson_trace, \
-    session_trace
+from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, phased_trace, \
+    poisson_trace, session_trace
 from repro.serve.fabric.placement import POLICIES
 
 
@@ -49,6 +49,10 @@ def make_trace(args):
     if args.traffic == "bursty":
         return bursty_trace(args.requests, prompt_lens=prompt_lens,
                             new_tokens=new_tokens, seed=args.seed)
+    if args.traffic == "phased":
+        return phased_trace(max(1, args.requests // 3),
+                            prompt_lens=prompt_lens,
+                            new_tokens=new_tokens, seed=args.seed)[0]
     return session_trace(max(1, args.requests // 4), 4,
                          prompt_lens=prompt_lens, new_tokens=new_tokens,
                          seed=args.seed)
@@ -97,10 +101,16 @@ def parse_hints(items) -> Hints:
 def build_plan(args, ap) -> EndpointPlan:
     """Resolve the flag surface — new (--plan/--hint) or legacy
     (--engine/--category) — into ONE EndpointPlan."""
+    # getattr defaults: programmatic callers hand-build Namespaces that
+    # may predate the adaptive flags
+    adaptive = getattr(args, "adaptive", False)
     knobs = dict(n_workers=args.workers, n_slots=args.slots,
                  max_len=args.max_len, decode_horizon=args.decode_horizon,
                  prefill_buckets=parse_buckets(args.prefill_buckets),
-                 use_ragged_kernel=args.ragged_kernel)
+                 use_ragged_kernel=args.ragged_kernel,
+                 adaptive=adaptive,
+                 adapt_window_ns=getattr(args, "adapt_window",
+                                         250.0) * 1e3)
     if args.placement is not None:
         # only an explicit flag pins placement — hints may resolve their
         # own (session_ordering -> session_affinity)
@@ -114,6 +124,12 @@ def build_plan(args, ap) -> EndpointPlan:
     if (args.plan or args.hint) and args.engine is not None:
         ap.error(f"--engine {args.engine} conflicts with --plan/--hint "
                  f"(a plan resolves its own executor)")
+    if args.engine == "wave" and adaptive:
+        # the IMPLICIT wave default silently upgrades to continuous
+        # under --adaptive, but an explicit engine choice must not be
+        # silently dropped
+        ap.error("--engine wave cannot re-plan live; drop --adaptive or "
+                 "use the continuous engine")
     if args.plan:
         if args.plan in (c.value for c in Category):
             return EndpointPlan.from_preset(args.plan, **knobs)
@@ -140,9 +156,22 @@ def build_plan(args, ap) -> EndpointPlan:
             DeprecationWarning, stacklevel=2)
         category = Category(args.category)
     executor = "auto"
-    if args.workers == 1 and (args.engine or "wave") == "wave":
-        executor = "wave"             # the historical single-engine default
+    if args.workers == 1 and (args.engine or "wave") == "wave" \
+            and not adaptive:
+        # the historical single-engine default (a wave engine cannot
+        # re-plan live, so --adaptive keeps the continuous executor)
+        executor = "wave"
         knobs.update(decode_horizon=1, prefill_buckets="auto")
+    if args.category is None and args.workers > 1:
+        # the bare legacy fleet (no category asked for) keeps the
+        # pre-plan sharing structure: dedicated slots and queues but ONE
+        # shared compiled set — the full level-1 diagonal would silently
+        # compile a private executable set per worker (N-fold jit cost
+        # the old fleet never paid); only an explicit --category opts
+        # into the diagonal (and warns above)
+        return EndpointPlan(
+            vector=SharingVector(slots=1, channels=1, execs=4),
+            executor=executor, **knobs)
     return EndpointPlan.from_category(category, executor=executor, **knobs)
 
 
@@ -176,6 +205,13 @@ def run_fleet(cfg, client, args) -> None:
           f"{'/'.join(f'{x * 100:.0f}%' for x in client.plan.footprint().values())}), "
           f"endpoint uuars={u['uuars'] * 100:.1f}% "
           f"memory={u['memory'] * 100:.1f}%")
+    if client.plan.adaptive:
+        path = " -> ".join(
+            f"{vec.label}@{t / 1e6:.2f}ms"
+            for t, vec in rep.transitions) or "none"
+        print(f"  adaptive: {rep.n_windows} windows, "
+              f"{len(rep.transitions)} migrations ({path}), "
+              f"mean footprint {rep.mean_footprint * 100:.1f}%")
     for c in rep.completions[:4]:
         print(f"  req {c.rid} (worker {c.worker}): {c.output}")
 
@@ -211,6 +247,12 @@ def run_single(cfg, client, args) -> None:
               f"{engine.stats['prefilled_requests']} requests "
               f"(buckets {list(engine.prefill_buckets) or 'off'}), "
               f"{syncs:.2f} host syncs/token")
+        if client.plan.adaptive:
+            path = " -> ".join(
+                f"{vec.label}@step{step}"
+                for step, vec in client.transitions) or "none"
+            print(f"adaptive: {engine.stats['regroups']} regroups "
+                  f"({path}); final vector {client.plan.vector.label}")
     for rid in sorted(out)[:4]:
         print(f"  req {rid}: {out[rid]}")
 
@@ -264,6 +306,16 @@ def main(argv=None):
                     help="admission prefill length buckets: 'auto'/'pow2' "
                          "(power-of-2 set), 'none' (exact-length), or a "
                          "comma list like '8,16,32'")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="live re-planning (DESIGN.md §12): a Replanner "
+                         "samples per-resource telemetry every window "
+                         "and migrates the SharingVector under shifting "
+                         "traffic")
+    ap.add_argument("--adapt-window", type=float, default=250.0,
+                    metavar="US",
+                    help="adaptation window in virtual microseconds "
+                         "(fleet mode; the single engine converts it to "
+                         "decode steps via the fabric cost model)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -271,7 +323,7 @@ def main(argv=None):
         ap.error("--workers > 1 serves through continuous-engine workers; "
                  "--engine wave only applies to a single engine")
     if args.workers == 1 and (args.engine or "wave") == "wave" \
-            and not (args.plan or args.hint):
+            and not (args.plan or args.hint or args.adaptive):
         if args.decode_horizon != 1:
             ap.error("--decode-horizon applies to the continuous engine")
         if parse_buckets(args.prefill_buckets) not in ("auto", "pow2",

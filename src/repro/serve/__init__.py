@@ -5,6 +5,7 @@ point (DESIGN.md §11); `ServeEngine` / `ContinuousEngine` / the fabric
 `Router` remain importable as the internal executors it selects.
 """
 
+from repro.core.adapt import Replanner, WindowStats
 from repro.core.plan import (EndpointPlan, Hints, PRESETS, SharingVector,
                              as_plan, resolve)
 from repro.serve.api import ServeClient, Stream, connect
@@ -12,7 +13,7 @@ from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 from repro.serve.slots import SlotPool
 
 __all__ = [
-    "ContinuousEngine", "EndpointPlan", "Hints", "PRESETS", "Request",
-    "ServeClient", "ServeEngine", "SharingVector", "SlotPool", "Stream",
-    "as_plan", "connect", "resolve",
+    "ContinuousEngine", "EndpointPlan", "Hints", "PRESETS", "Replanner",
+    "Request", "ServeClient", "ServeEngine", "SharingVector", "SlotPool",
+    "Stream", "WindowStats", "as_plan", "connect", "resolve",
 ]

@@ -46,13 +46,20 @@ from typing import Dict, List, Optional, Union
 import jax
 import numpy as np
 
+from repro.core.adapt import Replanner, WindowStats
 from repro.core.plan import EndpointPlan, Hints, SharingVector, as_plan
 from repro.models.model import Model
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 from repro.serve.fabric.placement import POLICIES
 from repro.serve.fabric.router import (Completion, EngineWorker,
-                                       FleetReport, Router)
+                                       FabricCosts, FleetReport, Router)
 from repro.serve.fabric.traffic import Arrival
+
+#: Plan fields a live ``replan`` may NOT change: they size caches,
+#: compiled shapes, or the worker fleet itself — migrating them would
+#: mean evicting in-flight requests, which the migration contract forbids.
+STRUCTURAL_FIELDS = ("n_workers", "n_slots", "max_len", "decode_horizon",
+                     "prefill_buckets", "use_ragged_kernel", "executor")
 
 # fabric session keys for streams live above any plausible caller-supplied
 # session id, so a stream's affinity key can never alias a user session
@@ -120,6 +127,9 @@ class ServeClient:
         self.executor = plan.resolved_executor
         self.results: Dict[int, List[int]] = {}
         self.report: Optional[FleetReport] = None   # last fleet report
+        #: live migrations applied so far: (schedule key, vector) —
+        #: virtual ns in fleet mode, engine step count in single-engine
+        self.transitions: List = []
         self._pending: List[_Pending] = []
         self._requests: Dict[int, _Pending] = {}
         self._streams: List[Stream] = []
@@ -237,7 +247,12 @@ class ServeClient:
     def _run_continuous(self, batch) -> Dict[int, List[int]]:
         """Drive the single engine's external-stepping hooks, releasing
         each stream's next request only once its predecessor retires —
-        per-stream FIFO over the slot pool, cross-stream concurrency."""
+        per-stream FIFO over the slot pool, cross-stream concurrency.
+        With ``plan.adaptive`` a ``Replanner`` samples the engine's own
+        counters every window (windows sized in decode steps via the
+        fabric cost model, so one knob paces both executors) and its
+        proposals land through ``_apply_vector`` — the same path manual
+        ``replan`` takes."""
         eng = self.engine
         unordered, streams = self._split(batch)
         inflight = {sid: None for sid in streams}
@@ -248,6 +263,11 @@ class ServeClient:
         # latency baseline per run(), exactly as ContinuousEngine.run()
         # re-baselines (start() is idempotent and keeps the first _t0)
         eng._t0 = time.perf_counter()
+        adapt = self._make_replanner() if self.plan.adaptive else None
+        win_steps = max(1, int(self.plan.adapt_window_ns
+                               // FabricCosts().t_step_base_ns))
+        mark = dict(eng.stats)
+        mark_compiles = eng.compile_count() if adapt is not None else 0
         while True:
             for sid in sorted(streams):
                 if inflight[sid] is None and streams[sid]:
@@ -262,6 +282,25 @@ class ServeClient:
                 sid = self._requests[r.rid].sid
                 if sid is not None and inflight.get(sid) == r.rid:
                     inflight[sid] = None
+            if adapt is not None and eng.stats["decode_steps"] \
+                    - mark["decode_steps"] >= win_steps:
+                d_slot = eng.stats["slot_steps"] - mark["slot_steps"]
+                d_busy = eng.stats["busy_slot_steps"] \
+                    - mark["busy_slot_steps"]
+                mark = dict(eng.stats)
+                compiles = eng.compile_count()
+                d_compiles, mark_compiles = \
+                    compiles - mark_compiles, compiles
+                vec = adapt.observe(WindowStats(
+                    occupancy=d_busy / d_slot if d_slot else 0.0,
+                    queue_depth=float(len(eng.queue)),
+                    jit_compiles=max(0, d_compiles), tokens=d_busy))
+                if vec is not None:
+                    self._apply_vector(vec)
+                    self.transitions.append((eng._step_no, vec))
+        if adapt is not None and adapt.vector != self.plan.vector:
+            self.plan = dataclasses.replace(self.plan, preset=None,
+                                            vector=adapt.vector)
         return out
 
     def _build_workers(self):
@@ -308,12 +347,103 @@ class ServeClient:
             nxt = waiting[sid].popleft()
             return [arrival(nxt, max(nxt.at_ns, c.t_done_ns))]
 
+        adapt = self._make_replanner() if self.plan.adaptive else None
         router = Router(self.workers, self.plan,
                         placement=self.plan.placement,
-                        on_complete=on_complete)
+                        on_complete=on_complete, adapt=adapt,
+                        adapt_window_ns=self.plan.adapt_window_ns)
         self.report = router.run(trace)
+        if adapt is not None:
+            self.transitions.extend(self.report.transitions)
+            if router.vector != self.plan.vector:
+                # the migrated vector persists: the next run()'s router
+                # (and its dispatch plan) starts where this one ended
+                self.plan = dataclasses.replace(self.plan, preset=None,
+                                                vector=router.vector)
         return {c.rid: list(c.output)
                 for c in self.report.completions}
+
+    # ----- live re-planning -----------------------------------------------
+    def _make_replanner(self) -> Replanner:
+        """The controller for this client's plan.  If an
+        ``adapt_budget`` forces the starting vector tighter than the plan
+        asked for, the clamp is applied to the live stack immediately so
+        the controller and the fleet never disagree."""
+        plan = self.plan
+        adapt = Replanner(plan.vector, n_workers=plan.n_workers,
+                          n_slots=plan.n_slots, budget=plan.adapt_budget)
+        if adapt.vector != plan.vector:
+            self._apply_vector(adapt.vector)
+            self.plan = dataclasses.replace(plan, preset=None,
+                                            vector=adapt.vector)
+        return adapt
+
+    def _apply_vector(self, vec: SharingVector) -> None:
+        """THE client-side migration executor — manual ``replan`` and the
+        automatic controller both land here.  Single-engine mode re-keys
+        the live engine (slot pool in place, executable group between
+        dispatches); fleet mode re-keys every persistent worker engine,
+        and the channel axis re-keys when the next ``run()`` builds its
+        router from the updated plan (mid-run fleet channel migration is
+        ``Router.apply_vector``, this method's virtual-time twin)."""
+        if self.executor == "wave":
+            raise ValueError("the wave executor cannot re-plan live; "
+                             "adaptive plans need continuous or fleet")
+        if self.executor == "continuous":
+            self.engine.regroup(slot_level=vec.slots,
+                                exec_group=vec.exec_group_of(0, 1))
+        else:
+            for w, worker in enumerate(self.workers):
+                worker.regroup(
+                    slot_level=vec.slots,
+                    exec_group=vec.exec_group_of(w, self.plan.n_workers))
+
+    def replan(self, spec=None, **overrides) -> EndpointPlan:
+        """Manually migrate this client to a new plan WITHOUT dropping
+        queued work or evicting in-flight state (DESIGN.md §12).
+
+        ``spec`` is anything ``connect`` accepts — an ``EndpointPlan``,
+        ``Hints`` (re-resolved against this client's fleet shape), a
+        ``SharingVector``, a preset name, or None with field overrides.
+        Only the sharing vector (and placement) may change: structural
+        fields (``n_workers``, ``n_slots``, ``max_len``, horizons,
+        buckets, executor) are pinned to the live deployment and raise
+        ``ValueError`` if a spec tries to move them.  Returns the new
+        plan.  Token values are migration-invariant — pinned bit-exactly
+        by the golden-trace harness."""
+        if self._closed:
+            raise RuntimeError("client is closed")
+        plan = self.plan
+        if isinstance(spec, EndpointPlan):
+            new = as_plan(spec, **overrides)
+        else:
+            keep = {f: getattr(plan, f) for f in STRUCTURAL_FIELDS}
+            keep.update(placement=plan.placement, adaptive=plan.adaptive,
+                        adapt_window_ns=plan.adapt_window_ns,
+                        adapt_budget=plan.adapt_budget)
+            if isinstance(spec, Hints):
+                # hints resolve their own placement and budget; the live
+                # plan's pre-filled values would silently override them
+                if spec.session_ordering:
+                    keep.pop("placement")
+                if spec.footprint_budget is not None:
+                    keep.pop("adapt_budget")
+            keep.update(overrides)
+            new = as_plan(spec, **keep)
+        for f in STRUCTURAL_FIELDS:
+            if getattr(new, f) != getattr(plan, f):
+                raise ValueError(
+                    f"live replan cannot change {f} "
+                    f"({getattr(plan, f)!r} -> {getattr(new, f)!r}); "
+                    f"connect() a fresh client for structural changes")
+        if new.placement not in POLICIES:
+            raise ValueError(f"unknown placement {new.placement!r}; "
+                             f"one of {sorted(POLICIES)}")
+        if new.vector != plan.vector:
+            self._apply_vector(new.vector)
+            self.transitions.append((None, new.vector))
+        self.plan = new
+        return new
 
     # ----- lifecycle ------------------------------------------------------
     def close(self):
@@ -346,3 +476,9 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
     if params is None:
         params = Model(cfg).init(jax.random.PRNGKey(seed))
     return ServeClient(cfg, params, resolved)
+
+
+# connect(..., adaptive=True) is the one-flag spelling of live
+# re-planning: the override lands on the plan, and the client attaches a
+# core.adapt.Replanner to every run (DESIGN.md §12).  Manual migration is
+# client.replan(plan_or_hints); both go through the same apply path.

@@ -380,7 +380,9 @@ class ContinuousEngine:
         self.stats = {"decode_steps": 0, "decode_calls": 0,
                       "slot_steps": 0, "busy_slot_steps": 0,
                       "prefills": 0, "prefilled_requests": 0,
-                      "host_syncs": 0}
+                      "host_syncs": 0, "regroups": 0}
+        self.use_ragged_kernel = use_ragged_kernel
+        self.exec_group = exec_group
         self._steps = _shared_steps(cfg, use_ragged_kernel, exec_group)
         self.model = self._steps.model
         self._decode = self._steps.decode
@@ -539,6 +541,66 @@ class ContinuousEngine:
         self.stats["prefills"] += 1
         self.stats["prefilled_requests"] += len(batch)
         return cache
+
+    def compile_count(self) -> int:
+        """Jitted specializations materialized so far across this
+        engine's executable set (jit's own per-shape cache sizes — the
+        counter the horizon tests and serve bench already read).  The
+        adaptive controller diffs this per window: fresh compiles are
+        the execs axis' contention signal.  0 when the running jax
+        lacks the probe."""
+        total = 0
+        for fn in (self._steps.decode, self._steps.prefill,
+                   self._steps.merge, self._steps.admit_packed,
+                   self._steps.horizon):
+            probe = getattr(fn, "_cache_size", None)
+            if probe is not None:
+                total += probe()
+        return total
+
+    def regroup(self, slot_level: Optional[int] = None,
+                exec_group: Optional[int] = None) -> bool:
+        """Live migration (DESIGN.md §12): re-key the slot pool and/or
+        the shared-executable group WITHOUT dropping queued or in-flight
+        requests; -> True when anything changed.
+
+        Slot regrouping is pure admission policy (``SlotPool.regroup``):
+        occupied slots keep decoding, the new group structure gates only
+        future admissions.  Exec regrouping swaps ``_shared_steps``
+        between jitted calls — the step that is executing when the swap
+        lands was dispatched from the OLD executable set and finishes on
+        it; the next dispatch keys into the new group, compiling lazily
+        if that group has never run this shape.  Neither path touches
+        the cache or the decode state, so token values are invariant
+        (the golden-trace harness pins this bit-exactly).
+        """
+        changed = False
+        if slot_level is not None and int(slot_level) != self.pool.level:
+            self.pool.regroup(slot_level)
+            changed = True
+        if exec_group is not None and int(exec_group) != self.exec_group:
+            self.exec_group = int(exec_group)
+            steps = _shared_steps(self.cfg, self.use_ragged_kernel,
+                                  self.exec_group)
+            self._steps = steps
+            self._decode = steps.decode
+            self._prefill = steps.prefill
+            self._merge = steps.merge
+            changed = True
+        if changed:
+            self.stats["regroups"] += 1
+            # keep the engine's plan truthful for the axis it owns: a
+            # migrated engine matches no named preset, and the slots
+            # level tracks the pool.  The execs LEVEL is fleet-relative
+            # (``exec_group`` is a group id — level 2 at 8 workers and
+            # level 4 at 2 workers both key group 0), so the facade's
+            # plan, not the engine's, is authoritative for that axis;
+            # ``self.exec_group`` records what this engine actually runs.
+            self.plan = dataclasses.replace(
+                self.plan, preset=None,
+                vector=dataclasses.replace(self.plan.vector,
+                                           slots=self.pool.level))
+        return changed
 
     def _retire(self, slot: int):
         req = self._slot_req[slot]

@@ -8,15 +8,17 @@ from repro.serve.fabric.placement import POLICIES, make_policy
 from repro.serve.fabric.router import (Completion, EngineWorker,
                                        FabricCosts, FleetReport, Router,
                                        SimWorker, build_sim_fleet)
-from repro.serve.fabric.traffic import (Arrival, TRAFFIC_SHAPES,
+from repro.serve.fabric.traffic import (Arrival, Phase, TRAFFIC_SHAPES,
                                         bursty_trace,
                                         canonical_bursty_trace,
-                                        poisson_trace, session_trace)
+                                        canonical_phased_trace,
+                                        phased_trace, poisson_trace,
+                                        session_trace)
 
 __all__ = [
     "Arrival", "Completion", "DispatchChannel", "EngineWorker",
-    "FabricCosts", "FleetReport", "POLICIES", "Router", "SimWorker",
-    "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
-    "canonical_bursty_trace", "make_policy", "poisson_trace",
-    "session_trace",
+    "FabricCosts", "FleetReport", "POLICIES", "Phase", "Router",
+    "SimWorker", "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
+    "canonical_bursty_trace", "canonical_phased_trace", "make_policy",
+    "phased_trace", "poisson_trace", "session_trace",
 ]

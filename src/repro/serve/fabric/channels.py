@@ -29,10 +29,26 @@ class DispatchChannel:
         self.lock = Resource()
         self.stats = {"enqueued": 0, "dequeued": 0,
                       "lock_wait_ns": 0.0, "lock_hold_ns": 0.0,
-                      "peak_depth": 0}
+                      "peak_depth": 0, "win_peak_depth": 0}
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def reset_window(self) -> int:
+        """-> the peak depth since the last reset, then re-baseline to
+        the CURRENT depth (a standing backlog keeps signalling) — the
+        adaptive controller's per-window contention probe."""
+        peak = self.stats["win_peak_depth"]
+        self.stats["win_peak_depth"] = len(self._q)
+        return peak
+
+    def drain(self) -> list:
+        """Remove and return every queued item (migration: the router
+        re-places them, in arrival order, onto a rebuilt channel set).
+        No lock cost — the fabric is quiesced at a replan point."""
+        items = list(self._q)
+        self._q.clear()
+        return items
 
     def _locked(self, t_ns: float, hold_ns: float) -> float:
         start, end = self.lock.acquire(t_ns, hold_ns)
@@ -47,6 +63,8 @@ class DispatchChannel:
         self.stats["enqueued"] += 1
         self.stats["peak_depth"] = max(self.stats["peak_depth"],
                                        len(self._q))
+        self.stats["win_peak_depth"] = max(self.stats["win_peak_depth"],
+                                           len(self._q))
         return end
 
     def pop(self, t_ns: float, hold_ns: float) -> Tuple[Optional[object],

@@ -19,7 +19,14 @@ Scheduling is event-driven in VIRTUAL time — the scheduler contract:
     structure, not from per-category constants.
 
 Identical (trace, config) pairs therefore replay identical schedules —
-fleet behavior is unit-testable without real parallelism.
+fleet behavior is unit-testable without real parallelism.  Online
+adaptation rides the same event loop (DESIGN.md §12): a ``replan`` event
+fires every ``adapt_window_ns`` of virtual time, feeds the window's
+telemetry to a ``core.adapt.Replanner``, and executes any proposed
+``SharingVector`` transition via ``apply_vector`` — rebuilt dispatch
+channels drain queued work in arrival order, worker pools re-key in
+place, engine workers swap executable groups — so even migration replays
+deterministically.
 
 Two worker types share one protocol (``capacity`` / ``admit`` / ``step``):
 ``SimWorker`` models decode cost only (bench sweeps: thousands of virtual
@@ -35,6 +42,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.adapt import Replanner, WindowStats
 from repro.core.channels import DispatchPlan
 from repro.core.endpoints import Category, category_for_level
 from repro.core.plan import EndpointPlan, SharingVector
@@ -105,6 +113,22 @@ class SimWorker:
     def n_active(self) -> int:
         return sum(s is not None for s in self._slots)
 
+    def regroup(self, slot_level: Optional[int] = None,
+                exec_group: Optional[int] = None) -> bool:
+        """Live migration: re-key the slot pool (admission policy only —
+        in-flight virtual requests keep their slots).  ``exec_group`` is
+        accepted for worker-protocol symmetry and ignored: a virtual
+        worker compiles nothing."""
+        if slot_level is None or slot_level == self.pool.level:
+            return False
+        self.pool.regroup(slot_level)
+        return True
+
+    def compile_probe(self):
+        """-> (key, count) for the window's jit-compile telemetry; a
+        virtual worker compiles nothing."""
+        return None, 0
+
     def capacity(self) -> int:
         occupied = [s is not None for s in self._slots]
         return len(self.pool.admissible(occupied))
@@ -170,6 +194,21 @@ class EngineWorker:
     def n_active(self) -> int:
         return self.engine.n_active + len(self.engine.queue)
 
+    def regroup(self, slot_level: Optional[int] = None,
+                exec_group: Optional[int] = None) -> bool:
+        """Live migration: delegate to the real engine — slot pool
+        re-keyed without evicting in-flight requests, executable set
+        swapped between jitted dispatches (new compiles allowed,
+        in-flight horizons finish on the old executable)."""
+        return self.engine.regroup(slot_level=slot_level,
+                                   exec_group=exec_group)
+
+    def compile_probe(self):
+        """-> (step-set identity, jit specializations so far).  The key
+        lets the router count each SHARED executable set once — at exec
+        level 4 the whole fleet reports one set, not N copies of it."""
+        return id(self.engine._steps), self.engine.compile_count()
+
     def capacity(self) -> int:
         return max(0, len(self.engine.free_slots())
                    - len(self.engine.queue))
@@ -229,7 +268,14 @@ class FleetReport:
     lock_wait_ns: float
     peak_depths: List[int]
     endpoint_usage: dict
-    vector: Optional[SharingVector] = None    # the plan axes actually run
+    vector: Optional[SharingVector] = None    # final plan axes run
+    #: (virtual t_ns, vector) per live migration — empty for frozen plans
+    transitions: List = dataclasses.field(default_factory=list)
+    #: time-weighted mean of SharingVector.footprint_score over the run
+    #: (== the static score for frozen plans; None for Category-keyed
+    #: routers, which never owned the slot/exec axes)
+    mean_footprint: Optional[float] = None
+    n_windows: int = 0                        # telemetry windows sampled
 
     @property
     def n_completed(self) -> int:
@@ -270,9 +316,13 @@ class Router:
     def __init__(self, workers: List, sharing, *,
                  placement: str = "round_robin",
                  costs: FabricCosts = FabricCosts(),
-                 on_complete: Optional[Callable] = None):
+                 on_complete: Optional[Callable] = None,
+                 adapt: Optional[Replanner] = None,
+                 adapt_window_ns: float = 250_000.0):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
+        if adapt is not None and adapt_window_ns <= 0:
+            raise ValueError("adapt_window_ns must be positive")
         if isinstance(sharing, EndpointPlan):
             sharing = sharing.vector
         if isinstance(sharing, SharingVector):
@@ -297,6 +347,33 @@ class Router:
         self.channels = [DispatchChannel(q, self.plan.workers_of(q))
                          for q in range(self.plan.n_queues)]
         self.policy: PlacementPolicy = make_policy(placement)
+        # ----- online adaptation (DESIGN.md §12) -------------------------
+        if adapt is not None:
+            if self.vector is None:
+                raise ValueError("adaptive routing needs a SharingVector "
+                                 "or EndpointPlan, not a scalar category")
+            if adapt.vector != self.vector:
+                raise ValueError(f"the replanner starts at {adapt.vector} "
+                                 f"but the fleet runs {self.vector}")
+        self.adapt = adapt
+        self.adapt_window_ns = adapt_window_ns
+        self.transitions: List = []            # (t_ns, vector)
+        self._n_windows = 0
+        self._lock_wait_retired = 0.0          # pre-migration channels
+        self._foot_t = 0.0                     # footprint integration
+        self._foot_acc = 0.0
+        # telemetry baselines for window deltas — snapshotted NOW, not
+        # zero: workers (and their engines' jit caches) persist across a
+        # ServeClient's runs while each run builds a fresh router, so a
+        # zero baseline would hand the first window the entire previous
+        # run's history as one giant delta
+        self._win_slot_steps = sum(w.stats["slot_steps"]
+                                   for w in workers)
+        self._win_busy_steps = sum(w.stats["busy_slot_steps"]
+                                   for w in workers)
+        self._win_lock_wait = 0.0              # channels are router-fresh
+        self._win_done = 0                     # completions index
+        self._win_compiles = self._fleet_compiles()
         # scheduler state
         self._heap: list = []
         self._seq = 0
@@ -319,10 +396,10 @@ class Router:
             self._push(t, "wake", w)
 
     # ----- handlers -------------------------------------------------------
-    def _on_arrival(self, t: float, arr: Arrival) -> None:
-        if arr.rid in self._arrivals:
-            raise ValueError(f"duplicate rid {arr.rid}")
-        self._arrivals[arr.rid] = arr
+    def _place(self, t: float, arr: Arrival) -> None:
+        """Put one arrival onto a channel via the placement policy and
+        wake that channel's workers — shared by fresh arrivals and the
+        re-placement of queued work after a channel-plan migration."""
         depths = [len(c) for c in self.channels]
         loads = [sum(self.workers[w].n_active for w in c.workers)
                  for c in self.channels]
@@ -330,6 +407,12 @@ class Router:
         released = self.channels[qid].push(t, arr, self.costs.t_enqueue_ns)
         for w in self.channels[qid].workers:
             self._wake(w, max(released, self._clock[w]))
+
+    def _on_arrival(self, t: float, arr: Arrival) -> None:
+        if arr.rid in self._arrivals:
+            raise ValueError(f"duplicate rid {arr.rid}")
+        self._arrivals[arr.rid] = arr
+        self._place(t, arr)
 
     def _on_wake(self, t: float, w: int) -> None:
         self._scheduled[w] = False
@@ -357,15 +440,136 @@ class Router:
         else:
             self._clock[w] = t        # idle: zero pending events
 
+    # ----- adaptation -----------------------------------------------------
+    def _fleet_compiles(self) -> int:
+        """Fleet-wide jit specializations, each shared executable set
+        counted once (the worker probe returns its set's identity)."""
+        seen, compiles = set(), 0
+        for w in self.workers:
+            probe = getattr(w, "compile_probe", None)
+            if probe is None:
+                continue             # duck-typed workers compile nothing
+            key, count = probe()
+            if key is None or key in seen:
+                continue
+            seen.add(key)
+            compiles += count
+        return compiles
+
+    def _window_stats(self, t: float) -> WindowStats:
+        """Telemetry delta since the last adaptation window — every field
+        comes from counters the fabric already keeps."""
+        slot_steps = sum(w.stats["slot_steps"] for w in self.workers)
+        busy = sum(w.stats["busy_slot_steps"] for w in self.workers)
+        d_slot = slot_steps - self._win_slot_steps
+        d_busy = busy - self._win_busy_steps
+        self._win_slot_steps, self._win_busy_steps = slot_steps, busy
+        lock = self._lock_wait_retired \
+            + sum(c.stats["lock_wait_ns"] for c in self.channels)
+        d_lock, self._win_lock_wait = lock - self._win_lock_wait, lock
+        fresh = self.completions[self._win_done:]
+        self._win_done = len(self.completions)
+        # p99 and lock wait drive no pressure today — they ride along so
+        # the window record matches what operators (and future policies)
+        # see; windows are small, the sort is cheap
+        lat = sorted(c.t_done_ns - self._arrivals[c.rid].t_ns
+                     for c in fresh)
+        p99 = lat[int(0.99 * (len(lat) - 1))] / 1e6 if lat else 0.0
+        depth = max((c.reset_window() / max(1, len(c.workers))
+                     for c in self.channels), default=0.0)
+        compiles = self._fleet_compiles()
+        d_compiles = compiles - self._win_compiles
+        self._win_compiles = compiles
+        return WindowStats(
+            occupancy=d_busy / d_slot if d_slot else 0.0,
+            queue_depth=depth, lock_wait_ns=d_lock, p99_ms=p99,
+            jit_compiles=max(0, d_compiles),
+            tokens=sum(c.new_tokens for c in fresh))
+
+    def _on_replan(self, t: float) -> None:
+        self._n_windows += 1
+        proposal = self.adapt.observe(self._window_stats(t))
+        if proposal is not None:
+            self.apply_vector(t, proposal)
+        if self._heap:
+            # keep sampling while the run is live (idle phases included:
+            # they are exactly when demotion telemetry accrues); a drained
+            # heap ends the run and the window chain with it
+            self._push(t + self.adapt_window_ns, "replan", None)
+
+    def apply_vector(self, t: float, new: SharingVector) -> None:
+        """Execute one live migration at virtual time ``t`` — THE fleet
+        transition path, shared by the automatic controller and
+        ``ServeClient.replan``:
+
+        * **channels**: rebuild the ``DispatchPlan`` and its channels,
+          draining queued arrivals from the old set and re-placing them
+          in arrival order (each re-placement pays the normal enqueue
+          lock at ``t`` — migration is visible in the lock telemetry,
+          never in token values);
+        * **slots**: every worker's pool re-keys in place — in-flight
+          requests keep their slots, only future admissions regroup;
+        * **execs**: every engine worker re-keys its shared-executable
+          group (compiles lazily on first use; in-flight work finishes
+          on the old executable).
+        """
+        old, n = self.vector, len(self.workers)
+        self._integrate_footprint(t)
+        if new.channels != old.channels:
+            pending = [a for c in self.channels for a in c.drain()]
+            pending.sort(key=lambda a: (a.t_ns, a.rid))
+            self._lock_wait_retired += sum(
+                c.stats["lock_wait_ns"] for c in self.channels)
+            self.plan = DispatchPlan(new.channels, n)
+            self.channels = [DispatchChannel(q, self.plan.workers_of(q))
+                             for q in range(self.plan.n_queues)]
+            self.category = category_for_level(new.channels)
+            for arr in pending:
+                self._place(t, arr)
+        if new.slots != old.slots:
+            for w in self.workers:
+                w.regroup(slot_level=new.slots)
+            # freed admission capacity (e.g. a drained group splitting)
+            # must not strand queued work behind idle workers
+            for w in range(n):
+                self._wake(w, max(t, self._clock[w]))
+        if new.execs != old.execs:
+            for i, w in enumerate(self.workers):
+                w.regroup(exec_group=new.exec_group_of(i, n))
+        self.vector = new
+        self.transitions.append((t, new))
+
+    def _integrate_footprint(self, t: float) -> None:
+        if self.vector is not None and t > self._foot_t:
+            n_slots = getattr(self.workers[0], "n_slots", 4)
+            score = self.vector.footprint_score(len(self.workers), n_slots)
+            self._foot_acc += score * (t - self._foot_t)
+            self._foot_t = t
+
+    def _mean_footprint(self, makespan: float) -> Optional[float]:
+        if self.vector is None:
+            return None
+        n_slots = getattr(self.workers[0], "n_slots", 4)
+        score = self.vector.footprint_score(len(self.workers), n_slots)
+        horizon = max(makespan, self._foot_t)
+        if horizon <= 0.0:
+            return score
+        self._integrate_footprint(horizon)
+        return self._foot_acc / horizon
+
     # ----- run ------------------------------------------------------------
     def run(self, trace: List[Arrival]) -> FleetReport:
         for arr in trace:
             self._push(arr.t_ns, "arrival", arr)
+        if self.adapt is not None and self._heap:
+            self._push(self.adapt_window_ns, "replan", None)
         while self._heap:
             t, _, kind, data = heapq.heappop(self._heap)
             self._events += 1
             if kind == "arrival":
                 self._on_arrival(t, data)
+            elif kind == "replan":
+                self._on_replan(t)
             else:
                 self._on_wake(t, data)
 
@@ -394,24 +598,30 @@ class Router:
             total_new_tokens=sum(c.new_tokens for c in self.completions),
             per_worker_tokens=per_worker,
             occupancy=busy / slot_steps if slot_steps else 0.0,
-            lock_wait_ns=sum(c.stats["lock_wait_ns"]
-                             for c in self.channels),
+            lock_wait_ns=self._lock_wait_retired
+            + sum(c.stats["lock_wait_ns"] for c in self.channels),
             peak_depths=[c.stats["peak_depth"] for c in self.channels],
             endpoint_usage=self.plan.endpoint_usage(),
             vector=self.vector,
+            transitions=list(self.transitions),
+            mean_footprint=self._mean_footprint(makespan),
+            n_windows=self._n_windows,
         )
 
 
 def build_sim_fleet(n_workers: int, sharing, *,
                     n_slots: int = 4, placement: str = "round_robin",
-                    costs: FabricCosts = FabricCosts()) -> Router:
+                    costs: FabricCosts = FabricCosts(),
+                    adapt: Optional[Replanner] = None,
+                    adapt_window_ns: float = 250_000.0) -> Router:
     """The bench/test entrypoint: N virtual workers behind a router.
 
     ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
     sharing only, worker slots stay dedicated) or a
     ``SharingVector``/``EndpointPlan``, whose ``slots`` axis then also
     keys every worker's pool — the full off-diagonal plan space on the
-    virtual fleet."""
+    virtual fleet.  ``adapt`` attaches a live ``core.adapt.Replanner``
+    sampled every ``adapt_window_ns`` of virtual time."""
     slot_level = 1
     if isinstance(sharing, EndpointPlan):
         sharing = sharing.vector
@@ -420,4 +630,5 @@ def build_sim_fleet(n_workers: int, sharing, *,
     workers = [SimWorker(w, n_slots=n_slots, costs=costs,
                          slot_level=slot_level)
                for w in range(n_workers)]
-    return Router(workers, sharing, placement=placement, costs=costs)
+    return Router(workers, sharing, placement=placement, costs=costs,
+                  adapt=adapt, adapt_window_ns=adapt_window_ns)

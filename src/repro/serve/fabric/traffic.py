@@ -5,7 +5,7 @@ time (nanoseconds, float) and is fully determined by its arguments — the
 same seed always replays the same trace, which is what makes fleet
 behavior unit-testable and the bench sweeps reproducible.
 
-Three shapes:
+Four shapes:
   * ``poisson_trace``   — memoryless open-loop load (exponential gaps).
   * ``bursty_trace``    — whole bursts land at one instant, the dispatch
     analogue of the paper's "all threads post at once" contention window;
@@ -13,6 +13,10 @@ Three shapes:
     blocking) from shared queue groups (any group member may pull).
   * ``session_trace``   — multi-turn sessions with think time; turns
     carry the session id so affinity placement has something to key on.
+  * ``phased_trace``    — the adaptive-replanning workload (DESIGN.md
+    §12): poisson → burst → idle → burst, so the best static
+    ``SharingVector`` SHIFTS mid-trace and a frozen plan must lose
+    throughput or waste footprint on at least one phase.
 """
 
 from __future__ import annotations
@@ -101,6 +105,85 @@ def session_trace(n_sessions: int, turns_per_session: int, *,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One arrival-time interval of a phased trace.  ``t_end_ns`` is the
+    start of the next phase (exclusive); requests belong to the phase
+    their ARRIVAL falls in, even if they complete later."""
+
+    name: str
+    t_start_ns: float
+    t_end_ns: float
+
+    @property
+    def duration_ns(self) -> float:
+        return self.t_end_ns - self.t_start_ns
+
+    def arrivals(self, trace: Sequence[Arrival]) -> List[Arrival]:
+        return [a for a in trace
+                if self.t_start_ns <= a.t_ns < self.t_end_ns]
+
+
+def phased_trace(requests_per_phase: int = 24, *,
+                 mean_gap_ns: float = 40_000.0,
+                 burst_size: int = 12,
+                 burst_gap_ns: float = 400_000.0,
+                 idle_ns: float = 4_000_000.0,
+                 prompt_lens: Sequence[int] = (8, 16, 32),
+                 new_tokens: Tuple[int, int] = (2, 24),
+                 seed: int = 0) -> Tuple[List[Arrival], List[Phase]]:
+    """Phase-shifting traffic: poisson → burst → idle → burst.
+
+    The workload whose best static plan changes mid-trace — steady
+    poisson load rewards dedicated resources, the bursts punish grouped
+    admission hardest, and the idle window makes a dedicated plan pure
+    footprint waste.  Returns ``(arrivals, phases)``; arrivals are
+    sorted by ``(t_ns, rid)`` and phases partition the arrival span.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[Arrival] = []
+    phases: List[Phase] = []
+    rid, t = 0, 0.0
+
+    start = t
+    for _ in range(requests_per_phase):          # phase 1: poisson
+        t += float(rng.exponential(mean_gap_ns))
+        out.append(_draw(rng, rid, t, prompt_lens, new_tokens))
+        rid += 1
+    t += mean_gap_ns                             # boundary gap
+    phases.append(Phase("poisson", start, t))
+
+    def burst_phase(name: str, t0: float) -> float:
+        tb = t0
+        for i in range(requests_per_phase):
+            tb = t0 + (i // burst_size) * burst_gap_ns
+            out.append(_draw(rng, rid + i, tb, prompt_lens, new_tokens))
+        end = tb + burst_gap_ns
+        phases.append(Phase(name, t0, end))
+        return end
+
+    t = burst_phase("burst", t)
+    rid += requests_per_phase
+
+    phases.append(Phase("idle", t, t + idle_ns))  # phase 3: nothing lands
+    t += idle_ns
+
+    burst_phase("burst2", t)
+    out.sort(key=lambda a: (a.t_ns, a.rid))
+    return out, phases
+
+
+def canonical_phased_trace() -> Tuple[List[Arrival], List[Phase]]:
+    """THE deterministic phased trace (adaptive bench + tests): 48
+    requests per busy phase on an 8-worker fleet, each burst phase
+    landing as ONE 48-request instant — 1.5× the fleet's 32 decode slots,
+    so grouped admission pays real head-of-line blocking — and a 4 ms
+    idle window, long enough that a frozen dedicated plan's footprint
+    waste dominates its mean, short enough that the bench stays
+    milliseconds."""
+    return phased_trace(48, burst_size=48, mean_gap_ns=30_000.0, seed=5)
+
+
 def canonical_bursty_trace() -> List[Arrival]:
     """THE deterministic bursty trace (tests + bench acceptance row): 4
     bursts of 24 heterogeneous requests on an 8-worker fleet — enough
@@ -115,4 +198,6 @@ TRAFFIC_SHAPES = {
     "bursty": lambda n, seed=0: bursty_trace(n, seed=seed),
     "session": lambda n, seed=0: session_trace(
         max(1, n // 4), 4, seed=seed),
+    "phased": lambda n, seed=0: phased_trace(
+        max(1, n // 3), seed=seed)[0],
 }

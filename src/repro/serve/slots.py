@@ -102,6 +102,32 @@ class SlotPool:
         return [range(lo, min(lo + g, self.n_slots))
                 for lo in range(0, self.n_slots, g)]
 
+    def regroup(self, level: int) -> "SlotPool":
+        """Live migration (DESIGN.md §12): re-key this pool to a new
+        sharing level WITHOUT evicting in-flight slots.
+
+        The pool is pure admission policy — occupancy lives with the
+        caller — so regrouping only changes which future admissions are
+        legal: occupied slots keep decoding, and the next
+        ``admissible()`` call sees the new group structure.  The frozen
+        dataclass is mutated deliberately (the pool's identity must
+        survive: engines and fabric workers hold references to it), and
+        the memoized ``group_size``/``groups`` entries are dropped from
+        ``__dict__`` — ``cached_property`` wrote them there, and without
+        the invalidation every later ``admissible()`` would silently
+        keep the OLD level's grouping (``tests/test_adapt.py`` pins
+        this).  Returns self for chaining.
+        """
+        level = int(level)
+        if not 1 <= level <= 4:
+            raise ValueError(f"sharing level must be 1..4, got {level}")
+        if level == self.level:
+            return self
+        object.__setattr__(self, "level", level)
+        for memo in ("group_size", "groups"):
+            self.__dict__.pop(memo, None)
+        return self
+
     def admissible(self, occupied: Sequence[bool],
                    queue_len: Optional[int] = None) -> List[int]:
         """Slots that may admit a queued request now: free slots whose

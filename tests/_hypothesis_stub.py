@@ -2,7 +2,8 @@
 
 The property tests draw from a small strategy set (``integers``,
 ``sampled_from``, ``floats``, ``booleans``, ``none``, ``one_of``,
-``builds``); this shim replays each ``@given`` test over a fixed, seeded
+``builds``, ``lists``, ``tuples``); this shim replays each ``@given``
+test over a fixed, seeded
 sample of the same strategy space so the suite still collects AND
 exercises the properties on a bare interpreter (requirements-dev.txt
 installs the real shrinking engine).  conftest.py installs it into ``sys.modules`` as
@@ -60,6 +61,17 @@ def builds(target, **kw):
         lambda rng: target(**{k: s.draw(rng) for k, s in kw.items()}))
 
 
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elements.draw(rng)
+                     for _ in range(int(rng.integers(min_size,
+                                                     max_size + 1)))])
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
 def given(**strategies_kw):
     def deco(fn):
         @functools.wraps(fn)
@@ -92,3 +104,5 @@ strategies.booleans = booleans
 strategies.none = none
 strategies.one_of = one_of
 strategies.builds = builds
+strategies.lists = lists
+strategies.tuples = tuples

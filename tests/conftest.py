@@ -22,3 +22,12 @@ if importlib.util.find_spec("hypothesis") is None:
 
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+
+def pytest_addoption(parser):
+    # golden-trace harness (tests/test_golden_traces.py): --regen-goldens
+    # REWRITES tests/golden/*.json from the current run instead of
+    # asserting against the committed streams
+    parser.addoption(
+        "--regen-goldens", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current run")

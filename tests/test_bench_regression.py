@@ -1,0 +1,134 @@
+"""The bench regression gate (benchmarks/check_regression.py): row
+matching, direction-aware tolerance bands, wall-clock vs virtual-time
+policy, acceptance flags, and coverage of the committed baselines."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (BASELINE_DIR, GATES,  # noqa: E402
+                                         VIRTUAL_TIME, compare_files,
+                                         compare_rows, main)
+
+TOLS = dict(tolerance=0.10, wall_tolerance=0.0, struct_tolerance=0.02)
+
+
+def test_identical_rows_pass():
+    m = {"tok_per_s": 1000.0, "p99_ms": 4.0, "footprint": 0.5,
+         "acceptance": True}
+    assert compare_rows("plan", m, dict(m), **TOLS) == []
+
+
+def test_throughput_regression_fails_improvement_passes():
+    base = {"tok_per_s": 1000.0}
+    assert compare_rows("plan", base, {"tok_per_s": 850.0}, **TOLS)
+    assert not compare_rows("plan", base, {"tok_per_s": 950.0}, **TOLS)
+    # improvement (or noise upward) never fails
+    assert not compare_rows("plan", base, {"tok_per_s": 5000.0}, **TOLS)
+
+
+def test_latency_regression_direction():
+    base = {"p99_ms": 4.0}
+    assert compare_rows("fabric", base, {"p99_ms": 5.0}, **TOLS)
+    assert not compare_rows("fabric", base, {"p99_ms": 3.0}, **TOLS)
+
+
+def test_wall_clock_perf_ungated_by_default():
+    base = {"tok_per_s": 1000.0, "decode_steps": 64}
+    fresh = {"tok_per_s": 100.0, "decode_steps": 64}
+    assert "serve" not in VIRTUAL_TIME
+    assert not compare_rows("serve", base, fresh, **TOLS)
+    # ...until a wall tolerance is requested
+    assert compare_rows("serve", base, fresh,
+                        **{**TOLS, "wall_tolerance": 0.5})
+
+
+def test_structural_metrics_gate_everywhere():
+    base = {"decode_steps": 64, "host_syncs": 10, "tokens": 283}
+    assert compare_rows("serve", base, {**base, "decode_steps": 80},
+                        **TOLS)
+    assert compare_rows("serve", base, {**base, "tokens": 200}, **TOLS)
+    assert not compare_rows("serve", base, dict(base), **TOLS)
+
+
+def test_footprint_gates_upward_only():
+    base = {"mean_footprint": 0.5}
+    assert compare_rows("adapt", base, {"mean_footprint": 0.6}, **TOLS)
+    assert not compare_rows("adapt", base, {"mean_footprint": 0.4},
+                            **TOLS)
+
+
+def test_acceptance_flip_fails():
+    assert compare_rows("adapt", {"acceptance": True},
+                        {"acceptance": False}, **TOLS)
+    assert not compare_rows("adapt", {"acceptance": False},
+                            {"acceptance": True}, **TOLS)
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump({"bench": "x", "rows": rows}, f)
+
+
+def test_missing_row_and_fresh_only_rows(tmp_path):
+    r1 = {"config": {"a": 1}, "metrics": {"tok_per_s": 10.0}}
+    r2 = {"config": {"a": 2}, "metrics": {"tok_per_s": 20.0}}
+    base, fresh = tmp_path / "b.json", tmp_path / "f.json"
+    _write(base, [r1, r2])
+    _write(fresh, [r1])
+    violations, compared, fresh_only = compare_files(
+        "plan", str(base), str(fresh), **TOLS)
+    assert any("missing" in v for v in violations) and compared == 1
+    # new fresh configs are fine
+    _write(fresh, [r1, r2, {"config": {"a": 3},
+                            "metrics": {"tok_per_s": 1.0}}])
+    violations, compared, fresh_only = compare_files(
+        "plan", str(base), str(fresh), **TOLS)
+    assert violations == [] and compared == 2 and fresh_only == 1
+
+
+def test_main_against_committed_baselines_self_compare():
+    """The committed baselines must pass their own gate (exit 0) — the
+    exact invocation CI runs, pointed at the baseline dir itself."""
+    assert os.path.isdir(BASELINE_DIR)
+    names = [f for f in os.listdir(BASELINE_DIR)
+             if f.startswith("BENCH_") and f.endswith(".json")]
+    assert {"BENCH_fabric.json", "BENCH_plan.json", "BENCH_adapt.json",
+            "BENCH_serve.json"} <= set(names)
+    assert main(["--fresh-dir", BASELINE_DIR]) == 0
+
+
+def test_update_bootstraps_missing_baseline_dir(tmp_path):
+    """--update must work into a missing baseline dir — it IS the
+    bootstrap path for a first baseline set."""
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    _write(fresh / "BENCH_x.json",
+           [{"config": {"a": 1}, "metrics": {"tok_per_s": 10.0}}])
+    target = tmp_path / "does" / "not" / "exist"
+    assert main(["--baseline-dir", str(target),
+                 "--fresh-dir", str(fresh), "--update"]) == 0
+    assert (target / "BENCH_x.json").exists()
+    # and the freshly bootstrapped baselines self-compare clean
+    assert main(["--baseline-dir", str(target),
+                 "--fresh-dir", str(fresh)]) == 0
+
+
+def test_main_flags_regression(tmp_path):
+    with open(os.path.join(BASELINE_DIR, "BENCH_plan.json")) as f:
+        data = json.load(f)
+    for row in data["rows"]:
+        if "tok_per_s" in row["metrics"]:
+            row["metrics"]["tok_per_s"] *= 0.5
+    out = tmp_path / "BENCH_plan.json"
+    out.write_text(json.dumps(data))
+    # degraded plan bench + everything else missing -> failure
+    assert main(["--fresh-dir", str(tmp_path)]) == 1
+
+
+def test_gate_table_is_direction_complete():
+    for metric, (direction, kind) in GATES.items():
+        assert direction in ("higher", "lower", "either", "flag")
+        assert kind in ("perf", "struct", "exact", "flag")

@@ -1,0 +1,165 @@
+"""The PR-4 back-compat surface, tested as a surface: every deprecated
+spelling raises EXACTLY one ``DeprecationWarning`` (a shim that warns
+twice spams real logs; one that warns zero times will be deleted while
+still in use) and translates to the identical plan its new spelling
+builds."""
+
+import argparse
+import functools
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.endpoints import Category
+from repro.core.plan import EndpointPlan, SharingVector
+from repro.launch.serve import build_plan
+from repro.models.model import Model
+from repro.serve.engine import ContinuousEngine
+from repro.serve.fabric.router import SimWorker
+from repro.serve.slots import SlotPool
+
+
+@functools.lru_cache(maxsize=None)
+def _served():
+    cfg = get_smoke_config("qwen2-0.5b")
+    return cfg, Model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _legacy_args(**overrides):
+    ns = argparse.Namespace(
+        plan=None, hint=[], engine=None, category=None, workers=1,
+        slots=4, max_len=128, decode_horizon=1, prefill_buckets="auto",
+        ragged_kernel=False, placement=None, adaptive=False,
+        adapt_window=250.0)
+    vars(ns).update(overrides)
+    return ns
+
+
+def _pool_shim():
+    old = SlotPool(category=Category.STATIC, n_slots=8)
+    new = SlotPool(Category.STATIC.level, n_slots=8)
+    return old, new, lambda p: (p.level, p.n_slots,
+                                [list(g) for g in p.groups])
+
+
+def _engine_shim():
+    cfg, params = _served()
+    old = ContinuousEngine(cfg, params, n_slots=3, max_len=64,
+                           category=Category.SHARED_DYNAMIC)
+    new = ContinuousEngine(cfg, params, n_slots=3, max_len=64,
+                           slot_level=Category.SHARED_DYNAMIC.level)
+    return old, new, lambda e: (e.plan.vector, e.pool.level,
+                                e.pool.n_slots, e.n_slots, e.max_len)
+
+
+def _engine_positional_category_shim():
+    """A Category passed where the level belongs (the old positional
+    spelling) coerces exactly like category=."""
+    cfg, params = _served()
+    old = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
+                           slot_level=Category.STATIC)
+    new = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
+                           slot_level=Category.STATIC.level)
+    return old, new, lambda e: (e.plan.vector, e.pool.level)
+
+
+def _sim_worker_shim():
+    old = SimWorker(0, n_slots=4, slot_category=Category.MPI_THREADS)
+    new = SimWorker(0, n_slots=4,
+                    slot_level=Category.MPI_THREADS.level)
+    return old, new, lambda w: (w.pool.level, w.pool.n_slots)
+
+
+def _launch_category_shim():
+    ap = argparse.ArgumentParser()
+    old = build_plan(_legacy_args(category="shared_dynamic", workers=4,
+                                  engine="continuous"), ap)
+    new = build_plan(_legacy_args(plan="shared_dynamic", workers=4), ap)
+    return old, new, lambda p: p
+
+
+def _launch_wave_default_shim():
+    """The bare legacy launch (no --plan/--hint/--category) builds the
+    historical wave plan with NO warning — only explicitly deprecated
+    flags warn — so it anchors the zero-warning baseline here."""
+    ap = argparse.ArgumentParser()
+    plan = build_plan(_legacy_args(), ap)
+    assert plan.resolved_executor == "wave"
+    assert plan.category is Category.MPI_EVERYWHERE
+    return plan
+
+
+SHIMS = {
+    "SlotPool(category=)": _pool_shim,
+    "ContinuousEngine(category=)": _engine_shim,
+    "ContinuousEngine(slot_level=Category)":
+        _engine_positional_category_shim,
+    "SimWorker(slot_category=)": _sim_worker_shim,
+    "launch --category": _launch_category_shim,
+}
+
+
+@pytest.mark.parametrize("name", sorted(SHIMS))
+def test_shim_warns_exactly_once_and_translates(name):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old, new, extract = SHIMS[name]()
+    deps = [w for w in rec
+            if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, \
+        f"{name}: expected exactly one DeprecationWarning, got " \
+        f"{[str(w.message)[:60] for w in deps]}"
+    assert extract(old) == extract(new), \
+        f"{name}: deprecated spelling diverged from its translation"
+
+
+def test_new_spellings_warn_never():
+    """The translations themselves are silent — otherwise the 'exactly
+    one' contract above would be measuring the wrong thing."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        SlotPool(3, n_slots=8)
+        cfg, params = _served()
+        ContinuousEngine(cfg, params, n_slots=3, max_len=64,
+                         slot_level=2)
+        SimWorker(0, n_slots=4, slot_level=4)
+        build_plan(_legacy_args(plan="shared_dynamic", workers=4),
+                   argparse.ArgumentParser())
+        _launch_wave_default_shim()
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_bare_legacy_fleet_keeps_shared_executables():
+    """The no-flag legacy fleet (no --plan/--hint/--category) keeps the
+    PRE-plan sharing structure — dedicated slots and queues, ONE shared
+    compiled set — with no warning; the full level-1 diagonal (private
+    executables per worker, N-fold jit cost) needs an explicit opt-in."""
+    import warnings as w
+    ap = argparse.ArgumentParser()
+    with w.catch_warnings(record=True) as rec:
+        w.simplefilter("always")
+        plan = build_plan(_legacy_args(workers=4), ap)
+    assert not [x for x in rec
+                if issubclass(x.category, DeprecationWarning)]
+    assert plan.vector == SharingVector(slots=1, channels=1, execs=4)
+    assert plan.resolved_executor == "fleet"
+    # one exec group for the whole fleet (the pre-plan _shared_steps)
+    assert {plan.exec_group_of(wk) for wk in range(4)} == {0}
+
+
+def test_launch_category_translates_to_diagonal_preset():
+    """The deprecated --category flag means the DIAGONAL preset now;
+    pin the exact plan equivalence field by field."""
+    ap = argparse.ArgumentParser()
+    with pytest.deprecated_call():
+        old = build_plan(_legacy_args(category="static", workers=8,
+                                      engine="continuous", slots=2,
+                                      decode_horizon=4), ap)
+    assert old == EndpointPlan.from_category(
+        Category.STATIC, n_workers=8, n_slots=2, max_len=128,
+        decode_horizon=4, prefill_buckets="auto",
+        adapt_window_ns=250_000.0)
+    assert old.vector == SharingVector.diagonal(3)

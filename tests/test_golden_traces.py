@@ -1,0 +1,203 @@
+"""Golden-trace regression harness (DESIGN.md §12).
+
+Every plan in the serving stack must produce ONE canonical token stream
+for the canonical bursty workload — plans (and live migration) change
+WHEN tokens are produced, never their values.  This suite pins that
+stream to a committed JSON golden (``tests/golden/serve_tokens.json``):
+
+* the full matrix {K ∈ {1, 8}} × {diagonal levels 1..4 + the PR-4
+  off-diagonal plan s1c3e4} × fleet {1, 4} replays the first burst of
+  ``canonical_bursty_trace`` and must match the golden bit-exactly;
+* ADAPTIVE runs — automatic (``connect(..., adaptive=True)``) and manual
+  mid-stream ``client.replan`` — must match the very same golden:
+  migration may move tokens in time, never change them.
+
+Regenerate after an intentional model/serving change with
+
+  PYTHONPATH=src python -m pytest tests/test_golden_traces.py \
+      --regen-goldens -q
+
+which rewrites the golden from the dedicated-diagonal K=1 solo run and
+re-verifies every other config against it in the same session.
+"""
+
+import functools
+import hashlib
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.configs import get_smoke_config
+from repro.core.plan import SharingVector
+from repro.models.model import Model
+from repro.serve.fabric.traffic import canonical_bursty_trace
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "serve_tokens.json"
+MAX_LEN = 64
+N_SLOTS = 4
+
+#: The plan axes of the matrix: all four diagonals plus the PR-4
+#: off-diagonal acceptance plan.
+VECTORS = {
+    "diag1": SharingVector.diagonal(1),
+    "diag2": SharingVector.diagonal(2),
+    "diag3": SharingVector.diagonal(3),
+    "diag4": SharingVector.diagonal(4),
+    "offdiag_s1c3e4": SharingVector(slots=1, channels=3, execs=4),
+}
+HORIZONS = (1, 8)
+FLEETS = (1, 4)
+
+CONFIGS = [(f"K{k}_{vname}_w{w}", k, vname, w)
+           for k in HORIZONS for vname in VECTORS for w in FLEETS]
+
+
+@functools.lru_cache(maxsize=None)
+def _served():
+    cfg = get_smoke_config("qwen2-0.5b")
+    return cfg, Model(cfg).init(jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _trace():
+    """The first burst of THE canonical bursty trace: 24 simultaneous
+    heterogeneous requests — every prompt/budget fits ``MAX_LEN`` and
+    the matrix stays a one-to-two-minute suite instead of a twenty."""
+    trace = tuple(canonical_bursty_trace()[:24])
+    assert all(a.prompt_len + a.max_new_tokens < MAX_LEN for a in trace)
+    return trace
+
+
+def _prompt_of(cfg, arrival) -> np.ndarray:
+    """Deterministic prompt derivation keyed by rid — the launcher's
+    convention (launch/serve.py), so goldens describe real streams."""
+    rng = np.random.default_rng(arrival.rid)
+    return rng.integers(1, cfg.vocab,
+                        size=arrival.prompt_len).astype(np.int32)
+
+
+def _run(k: int, vector: SharingVector, n_workers: int,
+         **overrides) -> dict:
+    cfg, params = _served()
+    client = serve.connect(cfg, vector, params=params,
+                           n_workers=n_workers, n_slots=N_SLOTS,
+                           max_len=MAX_LEN, decode_horizon=k, **overrides)
+    for a in _trace():
+        client.submit(_prompt_of(cfg, a),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns,
+                      session=a.session)
+    out = client.run()
+    return {str(rid): list(map(int, toks)) for rid, toks in out.items()}, \
+        client
+
+
+def _sha(tokens: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(tokens, sort_keys=True).encode()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def golden(request):
+    """The committed golden — or, under ``--regen-goldens``, a fresh one
+    recorded from the dedicated-diagonal K=1 solo run and written (with
+    every config's hash) at module teardown."""
+    regen = request.config.getoption("--regen-goldens")
+    state = {"regen": regen, "configs": {}}
+    if regen:
+        tokens, _ = _run(1, VECTORS["diag1"], 1)
+        state["tokens"] = tokens
+    else:
+        if not GOLDEN_PATH.exists():
+            pytest.fail(f"{GOLDEN_PATH} missing — run with "
+                        f"--regen-goldens to record it")
+        data = json.loads(GOLDEN_PATH.read_text())
+        state["tokens"] = data["tokens"]
+        state["committed_configs"] = data["configs"]
+    yield state
+    if regen:
+        missing = {c[0] for c in CONFIGS} - state["configs"].keys()
+        assert not missing, \
+            f"--regen-goldens needs the full matrix in one session " \
+            f"(deselect nothing); missing: {sorted(missing)}"
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps({
+            "trace": {"name": "canonical_bursty_trace[:24]",
+                      "max_len": MAX_LEN, "n_slots": N_SLOTS,
+                      "arch": "qwen2-0.5b (smoke)", "seed": 0,
+                      "prompts": "default_rng(rid)"},
+            "tokens": state["tokens"],
+            "configs": dict(sorted(state["configs"].items())),
+        }, indent=1) + "\n")
+
+
+@pytest.mark.parametrize("name,k,vname,workers", CONFIGS,
+                         ids=[c[0] for c in CONFIGS])
+def test_matrix_matches_golden(golden, name, k, vname, workers):
+    tokens, _ = _run(k, VECTORS[vname], workers)
+    assert tokens.keys() == golden["tokens"].keys()
+    for rid in tokens:
+        assert tokens[rid] == golden["tokens"][rid], \
+            f"{name}: stream {rid} diverged from the golden"
+    golden["configs"][name] = _sha(tokens)
+    if not golden["regen"]:
+        # the committed per-config hash is the tamper line: a config
+        # silently dropped from the goldens would otherwise pass
+        assert golden["committed_configs"][name] == _sha(tokens)
+
+
+def test_adaptive_fleet_matches_golden(golden):
+    """connect(..., adaptive=True): the replanner migrates the fleet
+    mid-trace (the burst forces promotions), yet every token stream
+    stays bit-identical to the frozen plans' golden."""
+    tokens, client = _run(8, SharingVector.diagonal(2), 4, adaptive=True,
+                          adapt_window_ns=100_000.0)
+    assert tokens == golden["tokens"]
+    assert client.plan.adaptive
+    # the run really adapted: telemetry windows were sampled, and any
+    # migrations the controller fired are on record
+    assert client.report.n_windows > 0
+    golden["configs"]["adaptive_K8_diag2_w4"] = _sha(tokens)
+    if not golden["regen"]:
+        assert golden["committed_configs"]["adaptive_K8_diag2_w4"] \
+            == _sha(tokens)
+
+
+def test_adaptive_single_engine_matches_golden(golden):
+    tokens, client = _run(1, SharingVector.diagonal(3), 1, adaptive=True,
+                          adapt_window_ns=100_000.0)
+    assert tokens == golden["tokens"]
+    golden["configs"]["adaptive_K1_diag3_w1"] = _sha(tokens)
+    if not golden["regen"]:
+        assert golden["committed_configs"]["adaptive_K1_diag3_w1"] \
+            == _sha(tokens)
+
+
+def test_manual_replan_mid_stream_matches_golden(golden):
+    """client.replan between runs: half the burst served on the shared
+    diagonal, a live migration to the dedicated off-diagonal plan, the
+    rest served after — one client, two plans, one golden stream."""
+    cfg, params = _served()
+    client = serve.connect(cfg, SharingVector.diagonal(3), params=params,
+                           n_workers=4, n_slots=N_SLOTS, max_len=MAX_LEN)
+    trace = _trace()
+    out = {}
+    for a in trace[:12]:
+        client.submit(_prompt_of(cfg, a),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns)
+    out.update(client.run())
+    client.replan(VECTORS["offdiag_s1c3e4"])
+    assert client.plan.vector == VECTORS["offdiag_s1c3e4"]
+    for a in trace[12:]:
+        client.submit(_prompt_of(cfg, a),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns)
+    out.update(client.run())
+    tokens = {str(rid): list(map(int, t)) for rid, t in out.items()}
+    assert tokens == golden["tokens"]
+    # the migration really re-keyed the live stack
+    assert all(w.engine.pool.level == 1 for w in client.workers)
+    assert len(client.report.peak_depths) == 1     # one shared channel

@@ -1,0 +1,156 @@
+"""Paged KV-cache bench (DESIGN.md §13): shared page pool vs the
+dedicated reservation, in pure virtual time.
+
+The paper's Table I point restated for serving: the KV cache is the
+endpoint's registered memory — by far the largest per-session
+reservation, mostly idle.  Today every admitted session pins
+``max_len`` rows (``max_pages`` pages) for its whole residency even
+though the canonical bursty trace needs ~4 of 16 on average.  The paged
+layout (pages level 4, one pool per worker, ``page_budget`` = 0.4× the
+dedicated reservation) reserves only what each session's span can
+reach, admission deferring — never corrupting — when the pool is dry.
+
+Acceptance (asserted, emitted as the ``paged_acceptance`` row of
+BENCH_paged.json, gated by ``check_regression``):
+
+* pooled throughput ≥ 0.95× the dedicated-budget paged run's (same
+  layout, only the budgets differ — the pool must not cost tokens);
+* reserved cache footprint ≤ 0.4× dedicated (that is the budget, and
+  the run must COMPLETE inside it);
+* ≥ 2× the live sessions per reserved page before the first stall:
+  FIFO-replaying the trace's page needs into the pooled budget admits
+  at least twice the sessions the dedicated layout fits in the same
+  memory (which pins ``max_pages`` per session regardless of need).
+
+Pure virtual time (``SimWorker`` fleets + a host-only ``PagePool``
+replay): host-milliseconds, deterministic, CI-comparable bit-for-bit.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_paged
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import row, write_bench_json
+from repro.core.plan import SharingVector
+from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
+from repro.serve.pages import PagePool
+
+N_WORKERS = 4
+N_SLOTS = 8
+MAX_LEN = 128
+PAGE_SIZE = 8
+MAX_PAGES = MAX_LEN // PAGE_SIZE
+DEDICATED_PAGES = N_SLOTS * MAX_PAGES          # per worker
+POOL_FRAC = 0.4
+POOL_BUDGET = int(POOL_FRAC * DEDICATED_PAGES)  # 51 of 128
+
+#: Both rows run the SAME paged layout; only the pages level (and so
+#: the budget keying) differs — the comparison isolates pooling.
+VECTORS = {
+    1: SharingVector(slots=1, channels=3, execs=4, pages=1),
+    4: SharingVector(slots=1, channels=3, execs=4, pages=4),
+}
+
+
+def page_need(arrival) -> int:
+    span = min(arrival.prompt_len + arrival.max_new_tokens, MAX_LEN)
+    return max(1, -(-span // PAGE_SIZE))
+
+
+def run_fleet(pages_level: int, budget):
+    rep = build_sim_fleet(N_WORKERS, VECTORS[pages_level],
+                          n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                          max_len=MAX_LEN, page_budget=budget) \
+        .run(canonical_bursty_trace())
+    assert rep.n_completed == rep.n_arrivals, (pages_level,
+                                               rep.n_completed)
+    return rep
+
+
+def sessions_before_stall(budget: int) -> int:
+    """FIFO-replay the trace's page needs into one pooled budget: how
+    many sessions are live when the pool first refuses one (the
+    admission-capacity measure; deterministic host bookkeeping)."""
+    trace = canonical_bursty_trace()
+    pool = PagePool(4, len(trace), MAX_PAGES, total_pages=budget)
+    for i, a in enumerate(trace):
+        if pool.alloc(i, page_need(a)) is None:
+            return i
+    return len(trace)
+
+
+def metrics_of(rep) -> dict:
+    return {
+        "tok_per_s": rep.tok_per_s,
+        "p50_ms": rep.latency_percentile(0.5) / 1e6,
+        "p99_ms": rep.latency_percentile(0.99) / 1e6,
+        "occupancy": rep.occupancy,
+        "completed": rep.n_completed,
+        "page_hwm_frac": rep.page_hwm_frac,
+        "page_deferrals": rep.page_deferrals,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    rows, reps = [], {}
+    for pages_level, budget in ((1, None), (4, POOL_BUDGET)):
+        rep = run_fleet(pages_level, budget)
+        reps[pages_level] = rep
+        m = metrics_of(rep)
+        reserved = budget if budget is not None else DEDICATED_PAGES
+        m["reserved_pages_per_worker"] = reserved
+        m["footprint"] = reserved / DEDICATED_PAGES
+        rows.append({"config": {
+            "mode": "paged", "pages_level": pages_level,
+            "page_size": PAGE_SIZE, "page_budget": reserved,
+            "workers": N_WORKERS, "n_slots": N_SLOTS,
+            "max_len": MAX_LEN, "trace": "canonical_bursty"},
+            "metrics": m})
+        row(f"paged_p{pages_level}_budget{reserved}",
+            1e3 / max(m["tok_per_s"], 1e-9) * 1e6,
+            f"{m['tok_per_s']:.0f}tok/s"
+            f"|reserved={m['footprint'] * 100:.0f}%"
+            f"|hwm={m['page_hwm_frac'] * 100:.0f}%"
+            f"|{m['page_deferrals']}deferrals")
+
+    # ----- acceptance ----------------------------------------------------
+    dedicated, pooled = reps[1], reps[4]
+    ratio = pooled.tok_per_s / dedicated.tok_per_s
+    foot = POOL_BUDGET / DEDICATED_PAGES
+    live_pooled = sessions_before_stall(POOL_BUDGET)
+    live_dedicated = max(1, POOL_BUDGET // MAX_PAGES)
+    live_ratio = live_pooled / live_dedicated
+    ok = ratio >= 0.95 and foot <= POOL_FRAC and live_ratio >= 2.0
+    rows.append({"config": {
+        "mode": "acceptance", "pool_frac": POOL_FRAC,
+        "page_size": PAGE_SIZE, "workers": N_WORKERS,
+        "n_slots": N_SLOTS, "max_len": MAX_LEN,
+        "trace": "canonical_bursty"},
+        "metrics": {
+            "tok_per_s_vs_dedicated": ratio,
+            "pooled_tok_per_s": pooled.tok_per_s,
+            "dedicated_tok_per_s": dedicated.tok_per_s,
+            "footprint": foot,
+            "sessions_before_stall": live_pooled,
+            "dedicated_sessions_same_memory": live_dedicated,
+            "sessions_ratio": live_ratio,
+            "pooled_deferrals": pooled.page_deferrals,
+            "acceptance": ok}})
+    row("paged_acceptance",
+        1e3 / max(pooled.tok_per_s, 1e-9) * 1e6,
+        f"vs_dedicated={ratio:.3f}x|reserved={foot * 100:.0f}%"
+        f"|sessions={live_pooled}v{live_dedicated}({live_ratio:.1f}x)"
+        f"|acceptance={'PASS' if ok else 'FAIL'}")
+    assert ok, (ratio, foot, live_ratio)
+
+    write_bench_json("paged", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,31 @@
-"""Paper Table I: bytes used by mlx5 Verbs resources + endpoint memory."""
+"""Paper Table I: bytes used by mlx5 Verbs resources + endpoint memory —
+and the serving analogue, the ACTUAL reserved KV-cache bytes of the
+smoke deployment under the contiguous vs paged layouts.
 
-from repro.core import resources as R
+Table I's point is that endpoint memory is dominated by one large,
+rarely-saturated resource (the context + registered regions).  The
+serving stack's equivalent is the KV cache: the contiguous layout pins
+``n_slots x max_len`` rows up front, while the paged layout
+(DESIGN.md §13) reserves a page pool the plan budgets.  The bytes below
+are measured off real ``Model.init_cache`` buffers (every leaf of the
+cache pytree, page tables included), not estimated.
+"""
+
+import jax
+
 from benchmarks.common import row
+from repro.core import resources as R
+
+N_SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 16
+MAX_PAGES = MAX_LEN // PAGE_SIZE
+POOL_FRAC = 0.4
+
+
+def _cache_bytes(model, **kw) -> int:
+    cache = model.init_cache(N_SLOTS, MAX_LEN, per_slot=True, **kw)
+    return sum(a.nbytes for a in jax.tree.leaves(cache))
 
 
 def main():
@@ -12,6 +36,23 @@ def main():
         row(f"table1_{name}_bytes", 0.0, str(b))
     row("table1_ctx_share_pct", 0.0,
         f"{R.CTX_BYTES / R.ENDPOINT_BYTES * 100:.1f}")
+
+    # ----- the serving analogue: reserved KV-cache bytes -----------------
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+    model = Model(get_smoke_config("qwen2-0.5b"))
+    contiguous = _cache_bytes(model)
+    dedicated = N_SLOTS * MAX_PAGES
+    paged_p1 = _cache_bytes(model, page_size=PAGE_SIZE,
+                            n_pages=dedicated)
+    pool = max(1, int(POOL_FRAC * dedicated))
+    paged_p4 = _cache_bytes(model, page_size=PAGE_SIZE, n_pages=pool)
+    row("table1_kv_contiguous_bytes", 0.0, str(contiguous))
+    row("table1_kv_paged_dedicated_bytes", 0.0,
+        f"{paged_p1}|{paged_p1 / contiguous * 100:.1f}%of_contiguous")
+    row("table1_kv_paged_pooled_bytes", 0.0,
+        f"{paged_p4}|budget={pool}of{dedicated}pages"
+        f"|{paged_p4 / contiguous * 100:.1f}%of_contiguous")
 
 
 if __name__ == "__main__":

@@ -45,7 +45,7 @@ BASELINE_DIR = os.path.join(HERE, "baselines")
 
 #: bench name -> deterministic in virtual time (gate perf metrics) or
 #: wall-clock (gate structure only, unless --wall-tolerance).
-VIRTUAL_TIME = {"fabric", "plan", "adapt"}
+VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged"}
 
 #: metric -> (direction, kind).  direction: which way is WORSE ("either"
 #: gates both ways).  kind "perf" gates per the bench's time domain;
@@ -57,6 +57,8 @@ GATES: Dict[str, Tuple[str, str]] = {
     "p99_ms": ("higher", "perf"),
     "mean_footprint": ("higher", "exact"),
     "footprint": ("higher", "exact"),
+    "page_hwm_frac": ("higher", "exact"),
+    "page_deferrals": ("higher", "struct"),
     "tokens": ("either", "struct"),
     "completed": ("either", "struct"),
     "decode_steps": ("either", "struct"),

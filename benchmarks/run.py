@@ -19,6 +19,7 @@ BENCHES = [
     "bench_fabric",
     "bench_plan_space",
     "bench_adaptive",
+    "bench_paged",
     "roofline",
 ]
 

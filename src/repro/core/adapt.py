@@ -49,7 +49,8 @@ import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.plan import RESOURCES, SharingVector, fit_budget
+from repro.core.plan import (PAGED_RESOURCES, RESOURCES, SharingVector,
+                             fit_budget)
 
 #: Sacrifice order when a budget blocks several promotions at once:
 #: withhold the cheapest-benefit promotion first — execs (bit-exact,
@@ -77,6 +78,9 @@ class WindowStats:
     p99_ms: float = 0.0           # window completions' p99 latency
     jit_compiles: int = 0         # fresh executable compiles in window
     tokens: int = 0               # tokens produced in the window
+    page_pressure: float = 0.0    # live-page fraction of the KV page
+    #                               pool (``PagePool.pressure``); stays 0
+    #                               on contiguous layouts
 
 
 class Replanner:
@@ -94,7 +98,7 @@ class Replanner:
                  demote_patience: int = 3, cooldown: int = 1,
                  hi: float = 0.7, lo: float = 0.2,
                  depth_scale: float = 2.0, compile_scale: float = 4.0,
-                 budget: Optional[float] = None):
+                 budget: Optional[float] = None, paged: bool = False):
         if not 0.0 <= lo < hi <= 1.0:
             raise ValueError(f"need 0 <= lo < hi <= 1, got lo={lo} hi={hi}")
         if window < 1 or patience < 1 or demote_patience < 1 \
@@ -112,11 +116,16 @@ class Replanner:
         self.depth_scale = depth_scale
         self.compile_scale = compile_scale
         self.budget = budget
+        #: paged=True adds the ``pages`` axis (KV page-pool sharing) to
+        #: the controlled set — off by default so every pre-pages
+        #: deployment (and its committed transition traces) is unchanged.
+        self.paged = bool(paged)
+        self._resources = PAGED_RESOURCES if paged else RESOURCES
         self.vector = self._fit_budget(vector or SharingVector.diagonal(2))
         self._win: deque = deque(maxlen=window)
-        self._streak: Dict[str, int] = {r: 0 for r in RESOURCES}
-        self._dir: Dict[str, int] = {r: 0 for r in RESOURCES}
-        self._cool: Dict[str, int] = {r: 0 for r in RESOURCES}
+        self._streak: Dict[str, int] = {r: 0 for r in self._resources}
+        self._dir: Dict[str, int] = {r: 0 for r in self._resources}
+        self._cool: Dict[str, int] = {r: 0 for r in self._resources}
         self._windows = 0
         #: (window index, vector) after every applied transition
         self.transitions: List[Tuple[int, SharingVector]] = []
@@ -132,8 +141,8 @@ class Replanner:
                           n_slots=self.n_slots)
 
     # ----- pressures ------------------------------------------------------
-    def _pressure_of(self, occ: float, depth: float,
-                     compiles: float) -> Dict[str, float]:
+    def _pressure_of(self, occ: float, depth: float, compiles: float,
+                     page: float = 0.0) -> Dict[str, float]:
         """Per-resource pressure in [0, 1] from raw telemetry.
 
         slots: occupancy, or queued backlog when admission is the
@@ -141,32 +150,37 @@ class Replanner:
         queue); channels: per-worker backlog against ``depth_scale``;
         execs: fresh-compile rate against ``compile_scale`` (an idle
         executable cache is safely shareable — sharing execs is
-        bit-exact and only costs compile locality).
+        bit-exact and only costs compile locality); pages (paged mode):
+        the pool's live-page fraction straight through.
         """
         clamp = lambda x: min(1.0, max(0.0, x))
         backlog = clamp(depth / self.depth_scale)
-        return {
+        p = {
             "slots": max(clamp(occ), backlog),
             "channels": backlog,
             "execs": clamp(compiles / self.compile_scale),
         }
+        if self.paged:
+            p["pages"] = clamp(page)
+        return p
 
     def pressures(self) -> Dict[str, float]:
         """Window-MEAN pressures — the sustained signal demotion needs."""
         if not self._win:
-            return {r: 0.0 for r in RESOURCES}
+            return {r: 0.0 for r in self._resources}
         n = len(self._win)
         return self._pressure_of(
             sum(s.occupancy for s in self._win) / n,
             sum(s.queue_depth for s in self._win) / n,
-            sum(s.jit_compiles for s in self._win) / n)
+            sum(s.jit_compiles for s in self._win) / n,
+            sum(s.page_pressure for s in self._win) / n)
 
     def _spot_pressures(self) -> Dict[str, float]:
         """Latest-sample pressures — the spike signal promotion reacts
         to (a burst must not wait for the sliding mean to catch up)."""
         s = self._win[-1]
         return self._pressure_of(s.occupancy, s.queue_depth,
-                                 s.jit_compiles)
+                                 s.jit_compiles, s.page_pressure)
 
     # ----- the hysteresis step -------------------------------------------
     def observe(self, stats: WindowStats) -> Optional[SharingVector]:
@@ -177,36 +191,48 @@ class Replanner:
         mean = self.pressures()
         spot = self._spot_pressures()
         moves: Dict[str, int] = {}
-        for r in RESOURCES:
+        for r in self._resources:
             level = getattr(self.vector, r)
-            if spot[r] >= self.hi and level > 1:
-                want = -1               # promote toward dedicated
-            elif max(mean[r], spot[r]) <= self.lo and level < 4:
-                want = +1               # demote toward shared
+            # pages is the INVERTED axis: its capacity lives in the
+            # pooling itself (a group hitting its budget while other
+            # groups idle is cured by sharing harder, not dedicating),
+            # so pool pressure drives pages toward shared and idleness
+            # back toward dedicated — the mirror image of the
+            # scheduling axes, on the same hysteresis machinery.
+            fast = +1 if r == "pages" else -1     # pressure response
+            slow = -fast                          # idleness response
+            if spot[r] >= self.hi and 1 <= level + fast <= 4:
+                want = fast
+            elif max(mean[r], spot[r]) <= self.lo \
+                    and 1 <= level + slow <= 4:
+                want = slow
             else:
                 self._streak[r], self._dir[r] = 0, 0
                 self._cool[r] = max(0, self._cool[r] - 1)
                 continue
-            if want > 0 and self._cool[r] > 0:
-                self._cool[r] -= 1      # lazy-release hold after a demote
+            if want == slow and self._cool[r] > 0:
+                self._cool[r] -= 1    # lazy-release hold after idleness
                 self._streak[r] = 0
                 continue
             # a direction flip restarts the streak — the hysteresis core
             self._streak[r] = self._streak[r] + 1 \
                 if self._dir[r] == want else 1
             self._dir[r] = want
-            need = self.patience if want < 0 else self.demote_patience
+            need = self.patience if want == fast \
+                else self.demote_patience
             if self._streak[r] >= need:
                 moves[r] = level + want
         if not moves:
             return None
         cand = dataclasses.replace(self.vector, **moves)
         if self.budget is not None:
-            # withhold promotions (cheapest benefit first: execs, then
-            # channels, slots last) until the candidate fits; withheld
-            # streaks stay saturated so the promotion lands the moment
-            # sharing elsewhere pays for it
-            for r in _SACRIFICE_ORDER:
+            # withhold footprint-raising moves (cheapest benefit first:
+            # pages dedication, then execs, channels, slots last) until
+            # the candidate fits; withheld streaks stay saturated so the
+            # move lands the moment sharing elsewhere pays for it
+            order = (("pages",) + _SACRIFICE_ORDER if self.paged
+                     else _SACRIFICE_ORDER)
+            for r in order:
                 if self._score(cand) <= self.budget:
                     break
                 if r in moves and moves[r] < getattr(self.vector, r):
@@ -216,8 +242,9 @@ class Replanner:
             return None
         for r in moves:
             self._streak[r] = 0
-            if moves[r] > getattr(self.vector, r):
-                self._cool[r] = self.cooldown   # demotions release lazily
+            slow = -1 if r == "pages" else +1
+            if moves[r] - getattr(self.vector, r) == slow:
+                self._cool[r] = self.cooldown   # idleness releases lazily
         self.vector = cand
         self.transitions.append((self._windows, cand))
         return cand

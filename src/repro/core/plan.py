@@ -40,7 +40,19 @@ from repro.core.endpoints import (Category, category_for_level,
 #: when a footprint budget forces more sharing, executables are shared
 #: first (bit-exact, only compile cost), channels second (latency tail),
 #: slots last (scheduling freedom).
+#:
+#: The fourth axis, ``pages`` (KV-cache page-pool sharing, PR 6), is
+#: deliberately NOT in this tuple: the budget loop bumps the three
+#: scheduling resources only.  Cache memory is resolved separately from
+#: ``Hints.memory_budget`` — the paper's follow-up ("Lessons Learned")
+#: shares the large rarely-saturated memory resources on their own
+#: dial, independent of the contended scheduling ones.
 RESOURCES = ("execs", "channels", "slots")
+
+#: All four sharing axes including the KV-cache page pool — what the
+#: paged-aware live controller (``core.adapt.Replanner(paged=True)``)
+#: iterates.
+PAGED_RESOURCES = RESOURCES + ("pages",)
 
 
 def _check_level(name: str, level: int) -> int:
@@ -67,21 +79,31 @@ class SharingVector:
         1 compiles a private set per worker (process-per-rank isolation,
         the MPI-everywhere extreme: maximal compile footprint, identical
         tokens).
+      pages: KV-cache page-pool groups (``serve.pages.PagePool``) —
+        level 1 reserves a dedicated full-length page budget per slot
+        (≡ the historical contiguous cache), level 4 draws every slot's
+        pages from one fleet-wide pool (the registered-memory-sharing
+        analogue).  Defaults to 1 so every pre-pages vector — and every
+        committed golden/baseline — is unchanged.
     """
 
     slots: int = 1
     channels: int = 1
     execs: int = 4
+    pages: int = 1
 
     def __post_init__(self):
-        for r in ("slots", "channels", "execs"):
+        for r in ("slots", "channels", "execs", "pages"):
             _check_level(r, getattr(self, r))
 
     # ----- diagonal <-> Category ----------------------------------------
     @classmethod
     def diagonal(cls, level_or_category) -> "SharingVector":
-        """The diagonal vector at one sharing level (all resource types
-        shared equally) — where the six ``Category`` presets live."""
+        """The diagonal vector at one sharing level (all SCHEDULING
+        resource types shared equally) — where the six ``Category``
+        presets live.  The historical diagonals predate the pages axis,
+        so ``pages`` stays at its dedicated default (1): a diagonal
+        names a point in the slots/channels/execs cube."""
         level = (level_or_category.level
                  if isinstance(level_or_category, Category)
                  else level_or_category)
@@ -95,8 +117,11 @@ class SharingVector:
     @property
     def label(self) -> str:
         """The compact ``s{slots}c{channels}e{execs}`` tag every bench
-        row, launcher line, and migration trace prints."""
-        return f"s{self.slots}c{self.channels}e{self.execs}"
+        row, launcher line, and migration trace prints — with a ``p``
+        suffix only when the page pool is actually shared, so every
+        pre-pages label (and committed baseline config) is unchanged."""
+        base = f"s{self.slots}c{self.channels}e{self.execs}"
+        return base if self.pages == 1 else f"{base}p{self.pages}"
 
     @property
     def category(self) -> Optional[Category]:
@@ -124,7 +149,7 @@ class SharingVector:
         n_workers = max(1, n_workers)
         n_slots = max(1, n_slots)
         slot_groups = math.ceil(n_slots / self.group_size("slots", n_slots))
-        return {
+        f = {
             "slots": slot_groups / n_slots,
             "channels": math.ceil(
                 n_workers / self.group_size("channels", n_workers))
@@ -133,6 +158,14 @@ class SharingVector:
                 n_workers / self.group_size("execs", n_workers))
             / n_workers,
         }
+        if self.pages > 1:
+            # pooled page budgets: one dedicated-slot reservation per
+            # page GROUP instead of per slot.  Only a shared pool adds
+            # the entry, so every pages=1 vector keeps its historical
+            # three-term footprint (and its exact scores).
+            f["pages"] = math.ceil(
+                n_slots / self.group_size("pages", n_slots)) / n_slots
+        return f
 
     def footprint_score(self, n_workers: int = 1, n_slots: int = 4) -> float:
         """Scalar footprint: the mean of the per-resource fractions (the
@@ -163,6 +196,11 @@ class Hints:
         then slots) until the vector fits.
       compile_isolation: dedicate a jitted-executable set per worker
         (exec level 1) — jit-cache isolation at N-fold compile cost.
+      memory_budget: optional ceiling on KV-cache reservation as a
+        fraction of the fully dedicated (slot × max_len) footprint.
+        Resolved straight to a ``pages`` level (1.0 → dedicated per-slot
+        reservation, ≤0.25 → one fleet-wide pool); independent of
+        ``footprint_budget``, which bounds the scheduling resources.
     """
 
     latency_target_ms: Optional[float] = None
@@ -170,6 +208,7 @@ class Hints:
     session_ordering: bool = False
     footprint_budget: Optional[float] = None
     compile_isolation: bool = False
+    memory_budget: Optional[float] = None
 
     def __post_init__(self):
         if not 0.0 <= self.burstiness <= 1.0:
@@ -181,6 +220,9 @@ class Hints:
         if self.footprint_budget is not None \
                 and not 0.0 < self.footprint_budget:
             raise ValueError("footprint_budget must be positive")
+        if self.memory_budget is not None \
+                and not 0.0 < self.memory_budget <= 1.0:
+            raise ValueError("memory_budget must be in (0, 1]")
 
 
 # latency target (ms) -> base sharing level: tighter targets buy more
@@ -198,6 +240,22 @@ def _latency_level(target_ms: Optional[float]) -> int:
     return 4
 
 
+# memory budget (fraction of dedicated KV reservation) -> pages level:
+# a looser budget keeps pages dedicated, a tighter one pools them.
+# Monotone: tighter budget never LOWERS the pages level.
+_MEMORY_LEVELS: Tuple[Tuple[float, int], ...] = (
+    (1.0, 1), (0.5, 2), (0.25, 3))
+
+
+def _pages_level(memory_budget: Optional[float]) -> int:
+    if memory_budget is None:
+        return 1          # dedicated reservation: the historical cache
+    for bound, level in _MEMORY_LEVELS:
+        if memory_budget >= bound:
+            return level
+    return 4
+
+
 def fit_budget(vec: SharingVector, budget: Optional[float], *,
                n_workers: int = 1, n_slots: int = 4) -> SharingVector:
     """Raise sharing levels — execs, then channels, then slots, the one
@@ -205,7 +263,11 @@ def fit_budget(vec: SharingVector, budget: Optional[float], *,
     fully shared).  THE budget loop: the static planner (``resolve``)
     and the live controller (``core.adapt.Replanner``) both clamp
     through here, so a hand-built starting vector obeys the budget
-    exactly like a planned one."""
+    exactly like a planned one.
+
+    The ``pages`` axis is carried through untouched (the replace below
+    only bumps scheduling levels): cache memory answers to
+    ``Hints.memory_budget``, not to the scheduling-footprint budget."""
     if budget is None:
         return vec
     while vec.footprint_score(n_workers, n_slots) > budget:
@@ -232,7 +294,8 @@ def resolve(hints: Hints, *, n_workers: int = 1,
     base = _latency_level(hints.latency_target_ms)
     channels = min(4, base + (1 if hints.burstiness >= 0.5 else 0))
     vec = SharingVector(slots=base, channels=channels,
-                        execs=1 if hints.compile_isolation else 4)
+                        execs=1 if hints.compile_isolation else 4,
+                        pages=_pages_level(hints.memory_budget))
     return fit_budget(vec, hints.footprint_budget,
                       n_workers=n_workers, n_slots=n_slots)
 
@@ -261,6 +324,13 @@ class EndpointPlan:
     placement: str = "round_robin"
     executor: str = "auto"            # auto | continuous | wave | fleet
     preset: Optional[str] = None      # source Category value, if any
+    # ----- paged KV cache (serve.pages.PagePool, DESIGN.md §13) ----------
+    page_size: int = 0                # tokens per page; 0 = auto (only
+    #                                   meaningful when the paged layout
+    #                                   is engaged, i.e. vector.pages > 1
+    #                                   or an explicit page_size)
+    page_budget: Optional[int] = None  # total pool pages; None = the
+    #                                    level-derived per-group budget
     # ----- online adaptation (core.adapt.Replanner, DESIGN.md §12) -------
     adaptive: bool = False            # live re-planning under traffic
     adapt_window_ns: float = 250_000.0    # telemetry window (virtual ns)
@@ -278,6 +348,13 @@ class EndpointPlan:
             raise ValueError("a plan needs at least one slot")
         if self.decode_horizon < 1:
             raise ValueError("decode_horizon must be >= 1")
+        if self.page_size < 0:
+            raise ValueError("page_size must be >= 0 (0 = auto)")
+        if self.page_size and self.max_len % self.page_size:
+            raise ValueError(f"page_size must divide max_len "
+                             f"({self.page_size} vs {self.max_len})")
+        if self.page_budget is not None and self.page_budget < 1:
+            raise ValueError("page_budget must be >= 1")
         if self.adapt_window_ns <= 0:
             raise ValueError("adapt_window_ns must be positive")
         if self.adaptive and self.executor == "wave":
@@ -331,6 +408,12 @@ class EndpointPlan:
         return self.vector.category
 
     @property
+    def paged(self) -> bool:
+        """Whether this plan opts into the paged KV-cache layout: a
+        shared page level or an explicit page size both engage it."""
+        return self.vector.pages > 1 or self.page_size > 0
+
+    @property
     def resolved_executor(self) -> str:
         if self.executor != "auto":
             return self.executor
@@ -373,6 +456,7 @@ def as_plan(spec, **overrides) -> EndpointPlan:
 
 
 __all__ = [
-    "RESOURCES", "SharingVector", "Hints", "fit_budget", "resolve",
-    "EndpointPlan", "PRESETS", "as_plan", "Buckets",
+    "RESOURCES", "PAGED_RESOURCES", "SharingVector", "Hints",
+    "fit_budget", "resolve", "EndpointPlan", "PRESETS", "as_plan",
+    "Buckets",
 ]

@@ -177,6 +177,105 @@ def ragged_decode_bhsd(q, k, v, cur_index, *, softcap: float = 0.0,
     )(cur_index.astype(jnp.int32), q, k, v)
 
 
+def _paged_decode_kernel(idx_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page_size: int,
+                         n_logical: int, softcap: float, scale: float,
+                         hkv: int):
+    h = pl.program_id(0)                 # b * Hkv + kv head
+    j = pl.program_id(1)                 # logical page of THIS slot
+    cur = idx_ref[h // hkv]              # this row's last valid kv position
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # logical pages entirely past the slot's length are skipped — this
+    # covers every UNMAPPED (sentinel) page-table entry too: a slot only
+    # writes inside the pages it owns, so cur < j * page_size there
+    @pl.when(j * page_size <= cur)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale           # (g, dh)
+        k = k_ref[0].astype(jnp.float32)                   # (ps, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        g = q_ref.shape[1]
+        k_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        s = jnp.where(k_pos <= cur, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_bhsd(q, k, v, page_table, cur_index, *,
+                      softcap: float = 0.0, interpret: bool = False):
+    """Paged decode attention: the page table rides in as a SECOND
+    scalar-prefetch operand, so each program instance's k/v index_map
+    dereferences it to fetch the slot's j-th logical page from the shared
+    physical page array — gather by BlockSpec, no materialized
+    contiguous cache.
+
+    q: (B*Hkv, G, dh) kv-head-major as in ``ragged_decode_bhsd``;
+    k/v: (N*Hkv, page_size, dh) physical pages, page-major;
+    page_table: (B, max_pages) int32, CLIPPED to [0, N-1] by the caller
+    (sentinel pages fetch a real block whose compute the length skip
+    drops); cur_index: (B,) int32.  -> (B*Hkv, G, dh)."""
+    bhkv, g, dh = q.shape
+    ps = k.shape[1]
+    b, max_pages = page_table.shape
+    assert bhkv % b == 0, (bhkv, b)
+    hkv = bhkv // b
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=ps, n_logical=max_pages,
+        softcap=softcap, scale=dh ** -0.5, hkv=hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bhkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda h, j, idx, pt: (h, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, dh),
+                lambda h, j, idx, pt, k=hkv: (pt[h // k, j] * k + h % k,
+                                              0, 0)),
+            pl.BlockSpec(
+                (1, ps, dh),
+                lambda h, j, idx, pt, k=hkv: (pt[h // k, j] * k + h % k,
+                                              0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda h, j, idx, pt: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bhkv, g, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cur_index.astype(jnp.int32), page_table.astype(jnp.int32), q, k, v)
+
+
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          softcap: float = 0.0, q_block: int = 512,
                          kv_block: int = 1024, interpret: bool = False):

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import (flash_attention_bhsd,
+                                                  paged_decode_bhsd,
                                                   ragged_decode_bhsd)
 
 
@@ -62,4 +63,36 @@ def flash_decode_attention(q, k_cache, v_cache, cur_index, *,
     out = ragged_decode_bhsd(qh, kh, vh, jnp.asarray(cur_index, jnp.int32),
                              softcap=softcap, kv_block=kv_block,
                              interpret=interpret)
+    return out.reshape(b, 1, hq, dh)
+
+
+@partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_decode_attention(q, k_pages, v_pages, page_table,
+                                 cur_index, *, softcap: float = 0.0,
+                                 interpret: bool = None):
+    """Page-table-gather decode attention over a PAGED KV cache
+    (DESIGN.md §13).
+
+    q: (B, 1, Hq, dh); k_pages/v_pages: (N, page_size, Hkv, dh) shared
+    physical pages; page_table: (B, max_pages) int32 — logical page j of
+    slot b lives in physical page ``page_table[b, j]`` (sentinel N =
+    unmapped); cur_index: (B,) int32.  Bit-checked against the jnp
+    gather oracle ``models.attention.attention_decode_paged``.
+    -> (B, 1, Hq, dh)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, _, hq, dh = q.shape
+    n, ps, hkv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
+    # (N, ps, Hkv, dh) -> kv-head-major pages (N*Hkv, ps, dh): physical
+    # page p, kv head hk at block row p * Hkv + hk (the index_map key)
+    kh = k_pages.transpose(0, 2, 1, 3).reshape(n * hkv, ps, dh)
+    vh = v_pages.transpose(0, 2, 1, 3).reshape(n * hkv, ps, dh)
+    # sentinel entries clip to a real page: its block gets FETCHED for
+    # the skipped grid steps but never computed on (length mask)
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, n - 1)
+    out = paged_decode_bhsd(qh, kh, vh, pt,
+                            jnp.asarray(cur_index, jnp.int32),
+                            softcap=softcap, interpret=interpret)
     return out.reshape(b, 1, hq, dh)

@@ -22,6 +22,7 @@ working: they translate to the equivalent preset `EndpointPlan`
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 import warnings
 
@@ -79,7 +80,7 @@ def parse_vector(spec: str) -> SharingVector:
 
 
 _HINT_TYPES = {"latency_target_ms": float, "burstiness": float,
-               "footprint_budget": float,
+               "footprint_budget": float, "memory_budget": float,
                "session_ordering": lambda v: v.lower() in ("1", "true",
                                                            "yes", "on"),
                "compile_isolation": lambda v: v.lower() in ("1", "true",
@@ -111,6 +112,26 @@ def build_plan(args, ap) -> EndpointPlan:
                  adaptive=adaptive,
                  adapt_window_ns=getattr(args, "adapt_window",
                                          250.0) * 1e3)
+    pages = getattr(args, "pages", 1) or 1
+    page_size = getattr(args, "page_size", 0) or 0
+    if pages < 1 or pages > 4:
+        ap.error("--pages must be a sharing level in 1..4")
+    if page_size:
+        knobs["page_size"] = page_size
+    if getattr(args, "page_budget", None) is not None:
+        knobs["page_budget"] = args.page_budget
+
+    def done(plan: EndpointPlan) -> EndpointPlan:
+        """Land --pages on whichever vector the flag surface resolved
+        (presets and legacy flags predate the pages axis)."""
+        if pages > 1:
+            if plan.vector.pages not in (1, pages):
+                ap.error(f"--pages {pages} conflicts with the plan's "
+                         f"pages level {plan.vector.pages}")
+            plan = dataclasses.replace(
+                plan, vector=dataclasses.replace(plan.vector,
+                                                 pages=pages))
+        return plan
     if args.placement is not None:
         # only an explicit flag pins placement — hints may resolve their
         # own (session_ordering -> session_affinity)
@@ -132,16 +153,18 @@ def build_plan(args, ap) -> EndpointPlan:
                  "use the continuous engine")
     if args.plan:
         if args.plan in (c.value for c in Category):
-            return EndpointPlan.from_preset(args.plan, **knobs)
+            return done(EndpointPlan.from_preset(args.plan, **knobs))
         try:
-            return EndpointPlan(vector=parse_vector(args.plan), **knobs)
+            return done(EndpointPlan(vector=parse_vector(args.plan),
+                                     **knobs))
         except (TypeError, ValueError) as e:
             ap.error(f"--plan must be a preset "
                      f"({', '.join(c.value for c in Category)}) or "
-                     f"'slots=..,channels=..[,execs=..]': {e}")
+                     f"'slots=..,channels=..[,execs=..,pages=..]': {e}")
     if args.hint:
         try:
-            return EndpointPlan.from_hints(parse_hints(args.hint), **knobs)
+            return done(EndpointPlan.from_hints(parse_hints(args.hint),
+                                                **knobs))
         except ValueError as e:
             ap.error(str(e))
     # ----- legacy flag translation ---------------------------------------
@@ -157,9 +180,10 @@ def build_plan(args, ap) -> EndpointPlan:
         category = Category(args.category)
     executor = "auto"
     if args.workers == 1 and (args.engine or "wave") == "wave" \
-            and not adaptive:
+            and not adaptive and pages == 1 and not page_size:
         # the historical single-engine default (a wave engine cannot
-        # re-plan live, so --adaptive keeps the continuous executor)
+        # re-plan live or page its cache, so --adaptive and the page
+        # flags keep the continuous executor)
         executor = "wave"
         knobs.update(decode_horizon=1, prefill_buckets="auto")
     if args.category is None and args.workers > 1:
@@ -169,10 +193,11 @@ def build_plan(args, ap) -> EndpointPlan:
         # compile a private executable set per worker (N-fold jit cost
         # the old fleet never paid); only an explicit --category opts
         # into the diagonal (and warns above)
-        return EndpointPlan(
+        return done(EndpointPlan(
             vector=SharingVector(slots=1, channels=1, execs=4),
-            executor=executor, **knobs)
-    return EndpointPlan.from_category(category, executor=executor, **knobs)
+            executor=executor, **knobs))
+    return done(EndpointPlan.from_category(category, executor=executor,
+                                           **knobs))
 
 
 def run_fleet(cfg, client, args) -> None:
@@ -200,11 +225,15 @@ def run_fleet(cfg, client, args) -> None:
           f"p99={rep.latency_percentile(0.99) / 1e6:.2f}ms "
           f"occupancy={rep.occupancy:.2f} fairness={rep.fairness:.3f} "
           f"lock_wait={rep.lock_wait_ns:.0f}ns")
+    foot = client.plan.footprint()
     print(f"  footprint: plan={client.plan.footprint_score() * 100:.1f}% "
-          f"(slots/channels/execs "
-          f"{'/'.join(f'{x * 100:.0f}%' for x in client.plan.footprint().values())}), "
+          f"({'/'.join(foot)} "
+          f"{'/'.join(f'{x * 100:.0f}%' for x in foot.values())}), "
           f"endpoint uuars={u['uuars'] * 100:.1f}% "
           f"memory={u['memory'] * 100:.1f}%")
+    if rep.page_hwm_frac is not None:
+        print(f"  pages: peak {rep.page_hwm_frac * 100:.1f}% of the "
+              f"dedicated reservation, {rep.page_deferrals} deferrals")
     if client.plan.adaptive:
         path = " -> ".join(
             f"{vec.label}@{t / 1e6:.2f}ms"
@@ -247,6 +276,13 @@ def run_single(cfg, client, args) -> None:
               f"{engine.stats['prefilled_requests']} requests "
               f"(buckets {list(engine.prefill_buckets) or 'off'}), "
               f"{syncs:.2f} host syncs/token")
+        if engine.paged:
+            pool = engine.page_pool
+            print(f"page pool: level {pool.level} "
+                  f"(page size {engine.page_size}, "
+                  f"{pool.total_pages} pages), "
+                  f"hwm {pool.hwm} ({pool.hwm / pool.total_pages:.0%}), "
+                  f"{pool.deferrals} deferrals")
         if client.plan.adaptive:
             path = " -> ".join(
                 f"{vec.label}@step{step}"
@@ -302,6 +338,20 @@ def main(argv=None):
     ap.add_argument("--decode-horizon", type=int, default=1,
                     help="fused decode steps per host sync (continuous "
                          "engine; 1 = per-step host loop, the oracle)")
+    ap.add_argument("--pages", type=int, default=1,
+                    help="KV page-pool sharing level 1..4 (DESIGN.md "
+                         "§13): 1 = dedicated per-slot reservation (the "
+                         "contiguous-equivalent default), 4 = one "
+                         "worker-wide pool; > 1 engages the paged cache "
+                         "layout")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page (0 = auto: the largest "
+                         "divisor of max-len <= 64); setting it also "
+                         "engages the paged layout")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="total pool pages per worker (default: the "
+                         "dedicated reservation slots x max-len / "
+                         "page-size)")
     ap.add_argument("--prefill-buckets", default="auto",
                     help="admission prefill length buckets: 'auto'/'pow2' "
                          "(power-of-2 set), 'none' (exact-length), or a "
@@ -323,7 +373,9 @@ def main(argv=None):
         ap.error("--workers > 1 serves through continuous-engine workers; "
                  "--engine wave only applies to a single engine")
     if args.workers == 1 and (args.engine or "wave") == "wave" \
-            and not (args.plan or args.hint or args.adaptive):
+            and not (args.plan or args.hint or args.adaptive
+                     or args.pages > 1 or args.page_size
+                     or args.page_budget is not None):
         if args.decode_horizon != 1:
             ap.error("--decode-horizon applies to the continuous engine")
         if parse_buckets(args.prefill_buckets) not in ("auto", "pow2",

@@ -213,6 +213,33 @@ def attention_decode(q, k_cache, v_cache, cur_index, *, window: int = 0,
     return out.reshape(b, 1, hq, dh).astype(q.dtype)
 
 
+def gather_pages(pages, page_table, page_size: int, max_len: int):
+    """Materialize a contiguous (B, max_len, Hkv, dh) cache view from a
+    paged one.  ``pages``: (N, page_size, Hkv, dh) physical pages;
+    ``page_table``: (B, max_pages) int32, sentinel entries (== N) CLIP to
+    the last real page — their garbage rows sit past every sequence's
+    valid length, so the decode index mask hides them."""
+    n = pages.shape[0]
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, n - 1)
+    g = pages[pt]                      # (B, max_pages, page_size, Hkv, dh)
+    b = page_table.shape[0]
+    return g.reshape((b, max_len) + pages.shape[2:])
+
+
+def attention_decode_paged(q, k_pages, v_pages, page_table, cur_index, *,
+                           page_size: int, max_len: int,
+                           softcap: float = 0.0):
+    """Single-token decode vs a PAGED cache — the jnp gather oracle the
+    Pallas paged kernel is bit-checked against.  q: (B,1,Hq,dh);
+    k_pages/v_pages: (N, page_size, Hkv, dh); page_table: (B, max_pages)
+    int32; cur_index: (B,) or scalar int32.  Gathers the slot's pages
+    into the contiguous layout and defers to ``attention_decode`` — same
+    values, same mask, so the paged path inherits its exact numerics."""
+    kg = gather_pages(k_pages, page_table, page_size, max_len)
+    vg = gather_pages(v_pages, page_table, page_size, max_len)
+    return attention_decode(q, kg, vg, cur_index, softcap=softcap)
+
+
 def select_attention(cfg: ArchConfig, seq_len: int,
                      skip_future: bool = False):
     """Pick the attention impl: chunked for long sequences, reference for

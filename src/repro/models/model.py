@@ -120,7 +120,9 @@ class Model:
                                      and cfg.sub_quadratic),
                        ragged_kernel=use_ragged_kernel and mode == "decode",
                        decode_write_mask=(decode_write_mask
-                                          if mode == "decode" else None))
+                                          if mode == "decode" else None),
+                       page_table=((cache or {}).get("pt")
+                                   if mode == "decode" else None))
         stack_cache = None if cache is None else cache["stack"]
         h, new_stack, aux = apply_stack(params["decoder"], x, cfg, self.plan,
                                         ctx, cache=stack_cache, remat=remat)
@@ -129,6 +131,10 @@ class Model:
         if cache is not None:
             idx = cache["idx"] + (1 if mode == "decode" else s)
             new_cache = {"stack": new_stack, "idx": idx}
+            if "pt" in cache:
+                # the page table is engine-owned and constant through a
+                # traced step; it rides the cache pytree unchanged
+                new_cache["pt"] = cache["pt"]
         return h, new_cache, aux
 
     # ----- training ------------------------------------------------------
@@ -172,17 +178,47 @@ class Model:
         return (all(d.kind in ATTN_KINDS for d in descs)
                 and not (cfg.attn_window > 0 and cfg.sub_quadratic))
 
+    @property
+    def supports_paged_cache(self) -> bool:
+        """True when the paged KV layout (DESIGN.md §13) is exact for
+        this arch: every block full-context attention.  Rolling-window
+        and recurrent blocks keep their own cache shapes, and enc-dec
+        carries cross caches — all fall back to the contiguous layout
+        (the engine checks this and silently disables paging)."""
+        from repro.models.transformer import ATTN_KINDS
+        cfg = self.cfg
+        descs = tuple(self.plan.prefix) + tuple(self.plan.period)
+        return (all(d.kind in ATTN_KINDS for d in descs)
+                and cfg.attn_window == 0 and not cfg.is_encdec)
+
     def init_cache(self, batch_size: int, max_len: int,
-                   enc_len: int = 0, per_slot: bool = False):
+                   enc_len: int = 0, per_slot: bool = False,
+                   page_size: int = 0, n_pages: int = 0):
         """``per_slot`` makes ``idx`` a (B,) vector so every batch row
         decodes at its own position (continuous batching — ragged slot
-        lengths in one shared cache)."""
+        lengths in one shared cache).
+
+        ``page_size > 0`` builds the PAGED cache: attention k/v become
+        ``(n_pages, page_size, Hkv, dh)`` shared physical pages and the
+        cache carries a sentinel-filled per-slot page table ``pt`` of
+        shape ``(B, max_len // page_size)`` (sentinel = ``n_pages``).
+        Requires ``supports_paged_cache``."""
         cfg = self.cfg
+        if page_size > 0:
+            assert self.supports_paged_cache, \
+                f"{cfg.name}: arch does not support the paged KV cache"
+            assert max_len % page_size == 0 and n_pages > 0, \
+                (max_len, page_size, n_pages)
         stack = init_stack_cache(
             cfg, self.plan, batch_size, max_len, enc_len=enc_len,
-            window_cache=(cfg.attn_window > 0 and cfg.sub_quadratic))
+            window_cache=(cfg.attn_window > 0 and cfg.sub_quadratic),
+            page_size=page_size, n_pages=n_pages)
         idx = jnp.zeros((batch_size,) if per_slot else (), jnp.int32)
-        return {"stack": stack, "idx": idx}
+        cache = {"stack": stack, "idx": idx}
+        if page_size > 0:
+            cache["pt"] = jnp.full((batch_size, max_len // page_size),
+                                   n_pages, jnp.int32)
+        return cache
 
     def prefill(self, params, batch, cache, shard_fn=lambda a, *n: a,
                 skip_future: bool = True, last_index=None):

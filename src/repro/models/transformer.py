@@ -145,6 +145,8 @@ class BlockCtx:
     window_cache: bool = False        # rolling window KV cache
     ragged_kernel: bool = False       # per-slot decode via Pallas kernel
     decode_write_mask: Any = None     # (B,) bool: rows allowed to write
+    page_table: Any = None            # (B, max_pages) int32: paged KV cache
+    #                                   (DESIGN.md §13); None = contiguous
 
 
 def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool,
@@ -170,6 +172,39 @@ def _attn_cache_write(cache, k_new, v_new, idx, window: int, rolling: bool,
         slot = idx
     k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    return {"k": k, "v": v}
+
+
+def _attn_cache_write_paged(cache, k_new, v_new, idx, page_table,
+                            write_mask=None):
+    """Scatter one decode step's k/v into a PAGED cache.
+
+    ``cache``: {"k": (N, page_size, Hkv, dh), "v": ...} physical pages
+    shared by every slot; ``idx``: (B,) per-slot positions;
+    ``page_table``: (B, max_pages) int32 mapping each slot's logical page
+    j to a physical page (sentinel N = unmapped).  Row b lands at flat
+    position ``pt[b, idx[b]//ps] * ps + idx[b] % ps``; rows that must not
+    write — retired slots past max_len, write_mask-off rows, sentinel
+    pages — are sent out of bounds, where ``mode="drop"`` discards them.
+    No aliasing: live slots own pairwise-disjoint pages (PagePool
+    invariant), so distinct rows always scatter to distinct flat rows."""
+    n, ps = cache["k"].shape[0], cache["k"].shape[1]
+    max_pages = page_table.shape[1]
+    max_len = max_pages * ps
+    idx = jnp.asarray(idx)
+    logical = jnp.clip(idx // ps, 0, max_pages - 1)
+    phys = jnp.take_along_axis(page_table.astype(jnp.int32),
+                               logical[:, None], axis=1)[:, 0]
+    flat = phys * ps + idx % ps
+    oob = jnp.int32(n * ps)
+    flat = jnp.where(idx < max_len, flat, oob)
+    if write_mask is not None:
+        flat = jnp.where(write_mask, flat, oob)
+    tail = cache["k"].shape[2:]
+    k = cache["k"].reshape((n * ps,) + tail).at[flat].set(
+        k_new[:, 0], mode="drop").reshape(cache["k"].shape)
+    v = cache["v"].reshape((n * ps,) + tail).at[flat].set(
+        v_new[:, 0], mode="drop").reshape(cache["v"].shape)
     return {"k": k, "v": v}
 
 
@@ -208,6 +243,30 @@ def _self_attention(p, h, ctx: BlockCtx, window: int, cache):
         k = apply_rope(k, pos, cfg)
 
     new_cache = cache
+    if ctx.mode == "decode" and ctx.page_table is not None:
+        # paged KV cache (DESIGN.md §13): scatter through the page table,
+        # attend via the page-gather kernel (TPU) or its jnp oracle.
+        # Engine-side eligibility (Model.supports_paged_cache) guarantees
+        # full-context attention only — no rolling windows here.
+        from repro.models.attention import attention_decode_paged
+        new_kv = _attn_cache_write_paged(
+            cache, k, v, ctx.decode_idx, ctx.page_table,
+            write_mask=ctx.decode_write_mask)
+        ps = new_kv["k"].shape[1]
+        if ctx.ragged_kernel and jnp.ndim(ctx.decode_idx) == 1:
+            from repro.kernels.flash_attention.ops import \
+                paged_flash_decode_attention
+            out = paged_flash_decode_attention(
+                q, new_kv["k"], new_kv["v"], ctx.page_table,
+                ctx.decode_idx, softcap=cfg.attn_logit_softcap)
+        else:
+            out = attention_decode_paged(
+                q, new_kv["k"], new_kv["v"], ctx.page_table,
+                ctx.decode_idx, page_size=ps,
+                max_len=ctx.page_table.shape[1] * ps,
+                softcap=cfg.attn_logit_softcap)
+        return jnp.einsum("bshk,hkd->bsd", out,
+                          p["wo"].astype(h.dtype)), new_kv
     if ctx.mode == "decode":
         rolling = ctx.window_cache and window > 0
         new_kv = _attn_cache_write(cache, k, v, ctx.decode_idx, window,
@@ -348,14 +407,27 @@ def stack_specs_tree(cfg: ArchConfig, plan: LayerPlan):
 
 def init_stack_cache(cfg: ArchConfig, plan: LayerPlan, batch: int,
                      max_len: int, enc_len: int = 0,
-                     window_cache: bool = False):
-    """Materialized (zeros) cache for the whole stack."""
+                     window_cache: bool = False, page_size: int = 0,
+                     n_pages: int = 0):
+    """Materialized (zeros) cache for the whole stack.
+
+    ``page_size > 0`` selects the PAGED layout (DESIGN.md §13): each
+    attention layer's k/v become ``(n_pages, page_size, Hkv, dh)``
+    physical pages with no batch axis — slots address them through the
+    shared page table the model threads via ``BlockCtx.page_table``."""
     def one(desc: LayerDesc):
         c = {}
         if desc.kind in ATTN_KINDS:
             window = cfg.attn_window if desc.kind == "attn_local" else 0
             s = min(max_len, window) if (window_cache and window) else max_len
             dt = jnp.dtype(cfg.compute_dtype)
+            if page_size > 0:
+                assert not (window_cache and window), \
+                    "paged cache excludes rolling-window layers"
+                shape = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+                c["attn"] = {"k": jnp.zeros(shape, dt),
+                             "v": jnp.zeros(shape, dt)}
+                return c
             c["attn"] = {
                 "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
                 "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt)}

@@ -59,7 +59,8 @@ from repro.serve.fabric.traffic import Arrival
 #: compiled shapes, or the worker fleet itself — migrating them would
 #: mean evicting in-flight requests, which the migration contract forbids.
 STRUCTURAL_FIELDS = ("n_workers", "n_slots", "max_len", "decode_horizon",
-                     "prefill_buckets", "use_ragged_kernel", "executor")
+                     "prefill_buckets", "use_ragged_kernel", "executor",
+                     "page_size", "page_budget")
 
 # fabric session keys for streams live above any plausible caller-supplied
 # session id, so a stream's affinity key can never alias a user session
@@ -294,7 +295,9 @@ class ServeClient:
                 vec = adapt.observe(WindowStats(
                     occupancy=d_busy / d_slot if d_slot else 0.0,
                     queue_depth=float(len(eng.queue)),
-                    jit_compiles=max(0, d_compiles), tokens=d_busy))
+                    jit_compiles=max(0, d_compiles), tokens=d_busy,
+                    page_pressure=(eng.page_pool.pressure()
+                                   if eng.paged else 0.0)))
                 if vec is not None:
                     self._apply_vector(vec)
                     self.transitions.append((eng._step_no, vec))
@@ -371,7 +374,8 @@ class ServeClient:
         the controller and the fleet never disagree."""
         plan = self.plan
         adapt = Replanner(plan.vector, n_workers=plan.n_workers,
-                          n_slots=plan.n_slots, budget=plan.adapt_budget)
+                          n_slots=plan.n_slots, budget=plan.adapt_budget,
+                          paged=plan.paged)
         if adapt.vector != plan.vector:
             self._apply_vector(adapt.vector)
             self.plan = dataclasses.replace(plan, preset=None,
@@ -390,13 +394,15 @@ class ServeClient:
             raise ValueError("the wave executor cannot re-plan live; "
                              "adaptive plans need continuous or fleet")
         if self.executor == "continuous":
-            self.engine.regroup(slot_level=vec.slots,
-                                exec_group=vec.exec_group_of(0, 1))
+            self.engine.regroup(
+                slot_level=vec.slots, exec_group=vec.exec_group_of(0, 1),
+                page_level=(vec.pages if self.engine.paged else None))
         else:
             for w, worker in enumerate(self.workers):
                 worker.regroup(
                     slot_level=vec.slots,
-                    exec_group=vec.exec_group_of(w, self.plan.n_workers))
+                    exec_group=vec.exec_group_of(w, self.plan.n_workers),
+                    page_level=vec.pages)
 
     def replan(self, spec=None, **overrides) -> EndpointPlan:
         """Manually migrate this client to a new plan WITHOUT dropping
@@ -439,6 +445,15 @@ class ServeClient:
         if new.placement not in POLICIES:
             raise ValueError(f"unknown placement {new.placement!r}; "
                              f"one of {sorted(POLICIES)}")
+        if new.paged != plan.paged:
+            # the PAGES LEVEL re-keys budgets live (pure accounting),
+            # but flipping the physical cache LAYOUT — contiguous <->
+            # paged — resizes every cache leaf, which is structural
+            raise ValueError(
+                "live replan cannot switch the KV-cache layout "
+                f"({'paged' if plan.paged else 'contiguous'} -> "
+                f"{'paged' if new.paged else 'contiguous'}); "
+                "connect() a fresh client with the paged plan instead")
         if new.vector != plan.vector:
             self._apply_vector(new.vector)
             self.transitions.append((None, new.vector))

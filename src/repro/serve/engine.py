@@ -53,6 +53,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.plan import EndpointPlan, SharingVector
 from repro.models.model import Model
+from repro.serve.pages import PagePool, sentinel
 from repro.serve.slots import SlotPool, _coerce_level
 
 
@@ -177,6 +178,8 @@ class SharedSteps:
     merge: object             # scatter one batch-1 cache into a slot
     admit_packed: object      # fused padded prefill + scatter + argmax
     horizon: object           # (params, cache, state, K, max_len)
+    merge_paged: object       # paged-cache variant of ``merge``
+    admit_packed_paged: object  # paged-cache variant of ``admit_packed``
 
 
 def _shared_steps(cfg: ArchConfig, use_ragged_kernel: bool,
@@ -221,8 +224,35 @@ def _shared_steps_cached(cfg: ArchConfig, use_ragged_kernel: bool,
         }
         return cache, state
 
+    def admit_packed_paged(p, full, state, toks, last_index, slot_ids,
+                           valid, lengths, remaining, eos, has_eos, pt,
+                           max_len):
+        """``admit_packed`` for the PAGED cache layout (DESIGN.md §13):
+        the prefill still runs on a fresh CONTIGUOUS in-graph cache (the
+        prompt is dense), then one fused page scatter lands each row's
+        cache in the pages its slot owns; ``pt`` is the round's merged
+        host page table, installed as the cache's new ``pt``."""
+        logits, many = model.prefill(
+            p, {"tokens": toks}, model.init_cache(toks.shape[0], max_len),
+            last_index=last_index)
+        has, src = _slot_mapping(slot_ids, valid, full["idx"].shape[0])
+        cache = _scatter_slots_paged(full, many, has, src, lengths, pt,
+                                     max_len)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        state = {
+            "tok": jnp.where(has, first[src], state["tok"]),
+            "remaining": jnp.where(has, remaining[src],
+                                   state["remaining"]),
+            "finished": state["finished"] & ~has,
+            "eos": jnp.where(has, eos[src], state["eos"]),
+            "has_eos": jnp.where(has, has_eos[src], state["has_eos"]),
+        }
+        return cache, state
+
     merge = jax.jit(_scatter_slot)
     admit_packed = jax.jit(admit_packed, static_argnums=(11,))
+    merge_paged = jax.jit(_scatter_slot_paged)
+    admit_packed_paged = jax.jit(admit_packed_paged, static_argnums=(12,))
     horizon = jax.jit(
         lambda p, c, s, k, ml: model.decode_horizon(
             p, c, s, horizon=k, max_len=ml,
@@ -230,7 +260,8 @@ def _shared_steps_cached(cfg: ArchConfig, use_ragged_kernel: bool,
         static_argnums=(3, 4))
     return SharedSteps(model=model, decode=decode, prefill=prefill,
                        merge=merge, admit_packed=admit_packed,
-                       horizon=horizon)
+                       horizon=horizon, merge_paged=merge_paged,
+                       admit_packed_paged=admit_packed_paged)
 
 
 def _scatter_slot(full, one, slot):
@@ -288,6 +319,95 @@ def _scatter_slots(full, many, has, src, lengths):
     idx = jnp.where(has, jnp.take(lengths, src).astype(full["idx"].dtype),
                     full["idx"])
     return {"stack": stack, "idx": idx}
+
+
+def _scatter_slot_paged(full, one, slot, pt_slot):
+    """Paged variant of ``_scatter_slot``: the batch-1 contiguous prefill
+    cache ``one`` lands in the pages slot ``slot`` owns (``pt_slot``,
+    (max_pages,) int32 — sentinel entries scatter nowhere via
+    ``mode="drop"``), its position pins, and the slot's page-table row
+    installs.  Prefix leaves are (N, ps, ...) pages (scatter axis 0);
+    scanned body leaves carry the n_periods axis first (axis 1)."""
+    max_pages = pt_slot.shape[0]
+    ids = pt_slot.astype(jnp.int32)
+
+    def upd(axis):
+        def f(dst, s):
+            ps = dst.shape[axis + 1]
+            tail = s.shape[axis + 2:]
+            pre = s.shape[:axis]
+            rows = s.reshape(pre + (max_pages, ps) + tail)
+            if axis == 0:
+                return dst.at[ids].set(rows, mode="drop")
+            return dst.at[:, ids].set(rows, mode="drop")
+        return f
+
+    stack = {
+        "prefix": [jax.tree.map(upd(0), f, o)
+                   for f, o in zip(full["stack"]["prefix"],
+                                   one["stack"]["prefix"])],
+        "body": [jax.tree.map(upd(1), f, o)
+                 for f, o in zip(full["stack"]["body"],
+                                 one["stack"]["body"])],
+    }
+    return {"stack": stack, "idx": full["idx"].at[slot].set(one["idx"]),
+            "pt": full["pt"].at[slot].set(ids)}
+
+
+def _scatter_slots_paged(full, many, has, src, lengths, pt, max_len):
+    """Fused multi-slot PAGED scatter: for every slot ``b`` with
+    ``has[b]``, row ``src[b]`` of the batched-prefill contiguous cache
+    ``many`` splits into page-size chunks and scatters into the pages
+    ``pt[b]`` maps; slots without a row (and sentinel table entries)
+    scatter nowhere.  ``pt`` is the round's merged host page table and
+    becomes the cache's new table wholesale."""
+    n = full["idx"].shape[0]
+    max_pages = pt.shape[1]
+    ps = max_len // max_pages
+    # rows that must not land anywhere send every table entry to the
+    # sentinel (one past the last physical page -> dropped)
+    def flat_ids(dst_pages):
+        sent = jnp.int32(dst_pages)
+        return jnp.where(has[:, None], pt.astype(jnp.int32),
+                         sent).reshape(n * max_pages)
+
+    def upd(axis):
+        def f(dst, s):
+            tail = s.shape[axis + 2:]
+            pre = s.shape[:axis]
+            rows = jnp.take(s, src, axis=axis)
+            rows = rows.reshape(pre + (n * max_pages, ps) + tail)
+            ids = flat_ids(dst.shape[axis])
+            if axis == 0:
+                return dst.at[ids].set(rows, mode="drop")
+            return dst.at[:, ids].set(rows, mode="drop")
+        return f
+
+    stack = {
+        "prefix": [jax.tree.map(upd(0), f, o)
+                   for f, o in zip(full["stack"]["prefix"],
+                                   many["stack"]["prefix"])],
+        "body": [jax.tree.map(upd(1), f, o)
+                 for f, o in zip(full["stack"]["body"],
+                                 many["stack"]["body"])],
+    }
+    idx = jnp.where(has, jnp.take(lengths, src).astype(full["idx"].dtype),
+                    full["idx"])
+    return {"stack": stack, "idx": idx, "pt": pt.astype(jnp.int32)}
+
+
+def auto_page_size(max_len: int, target: int = 0) -> int:
+    """The default KV page size when the plan says paged but not how
+    big: the largest divisor of ``max_len`` not exceeding ``target``
+    (auto target = ``max_len // 4`` clamped to [8, 64] — at least 4
+    pages per sequence so pooling has granularity to pack, pages no
+    smaller than a kernel block)."""
+    if target <= 0:
+        target = max(8, min(64, max_len // 4))
+    for ps in range(min(target, max_len), 0, -1):
+        if max_len % ps == 0:
+            return ps
+    return max_len
 
 
 def pow2_buckets(max_len: int, lo: int = 8) -> Tuple[int, ...]:
@@ -388,6 +508,25 @@ class ContinuousEngine:
         self._decode = self._steps.decode
         self._prefill = self._steps.prefill
         self._merge = self._steps.merge
+        # ----- paged KV cache (plan-gated; DESIGN.md §13) ----------------
+        # The paged layout engages only when the plan asks for it AND the
+        # model can honor it (pure attention, no rolling window, decoder-
+        # only); otherwise the historical contiguous cache runs untouched
+        # — a paged plan on an ineligible model quietly falls back, like
+        # the auto prefill buckets do.
+        self.page_pool: Optional[PagePool] = None
+        self.page_size = 0
+        self._pt = None                  # host page-table mirror (np)
+        if plan is not None and plan.paged \
+                and self.model.supports_paged_cache:
+            self.page_size = plan.page_size or auto_page_size(max_len)
+            self.page_pool = PagePool(
+                plan.vector.pages, n_slots, max_len // self.page_size,
+                total_pages=plan.page_budget)
+            # page telemetry only exists on paged engines, so every
+            # contiguous stats dict (and committed golden) is unchanged
+            self.stats["page_deferrals"] = 0
+            self.stats["page_hwm"] = 0
         self.prefill_buckets = self._resolve_buckets(prefill_buckets)
         self._t0 = 0.0
         self._started = False
@@ -463,7 +602,14 @@ class ContinuousEngine:
         prompt = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
         one = self.model.init_cache(1, self.max_len)
         logits, one = self._prefill(self.params, {"tokens": prompt}, one)
-        cache = self._merge(cache, one, jnp.asarray(slot, jnp.int32))
+        if self.page_pool is not None:
+            # the batch-1 prefill is contiguous (prompts are dense); the
+            # page scatter splits it into the slot's pages
+            cache = self._steps.merge_paged(
+                cache, one, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(self._pt[slot]))
+        else:
+            cache = self._merge(cache, one, jnp.asarray(slot, jnp.int32))
         first = int(jnp.argmax(logits, -1)[0])
         self._bind(slot, req, first)
         if self._dev_state is not None:
@@ -524,11 +670,20 @@ class ContinuousEngine:
             has_eos[j] = req.eos_id is not None
         fused = self._dev_state is not None
         state = self._dev_state if fused else self._host_state()
-        cache, state = self._steps.admit_packed(
-            self.params, cache, state, jnp.asarray(toks),
-            jnp.asarray(last), jnp.asarray(slot_ids), jnp.asarray(valid),
-            jnp.asarray(lengths), jnp.asarray(remaining),
-            jnp.asarray(eos), jnp.asarray(has_eos), self.max_len)
+        if self.page_pool is not None:
+            cache, state = self._steps.admit_packed_paged(
+                self.params, cache, state, jnp.asarray(toks),
+                jnp.asarray(last), jnp.asarray(slot_ids),
+                jnp.asarray(valid), jnp.asarray(lengths),
+                jnp.asarray(remaining), jnp.asarray(eos),
+                jnp.asarray(has_eos), jnp.asarray(self._pt), self.max_len)
+        else:
+            cache, state = self._steps.admit_packed(
+                self.params, cache, state, jnp.asarray(toks),
+                jnp.asarray(last), jnp.asarray(slot_ids),
+                jnp.asarray(valid), jnp.asarray(lengths),
+                jnp.asarray(remaining), jnp.asarray(eos),
+                jnp.asarray(has_eos), self.max_len)
         if fused:
             self._dev_state = state
             for slot, req in batch:
@@ -552,14 +707,16 @@ class ContinuousEngine:
         total = 0
         for fn in (self._steps.decode, self._steps.prefill,
                    self._steps.merge, self._steps.admit_packed,
-                   self._steps.horizon):
+                   self._steps.merge_paged,
+                   self._steps.admit_packed_paged, self._steps.horizon):
             probe = getattr(fn, "_cache_size", None)
             if probe is not None:
                 total += probe()
         return total
 
     def regroup(self, slot_level: Optional[int] = None,
-                exec_group: Optional[int] = None) -> bool:
+                exec_group: Optional[int] = None,
+                page_level: Optional[int] = None) -> bool:
         """Live migration (DESIGN.md §12): re-key the slot pool and/or
         the shared-executable group WITHOUT dropping queued or in-flight
         requests; -> True when anything changed.
@@ -578,6 +735,19 @@ class ContinuousEngine:
         if slot_level is not None and int(slot_level) != self.pool.level:
             self.pool.regroup(slot_level)
             changed = True
+        if page_level is not None:
+            if self.page_pool is None:
+                if int(page_level) != 1:
+                    raise ValueError(
+                        "cannot regroup pages on a contiguous-layout "
+                        "engine: the physical cache layout is structural "
+                        "— connect with a paged plan (vector.pages > 1 "
+                        "or page_size) first")
+            elif int(page_level) != self.page_pool.level:
+                # pure budget re-keying: every live page mapping
+                # survives (PagePool.regroup), tokens are invariant
+                self.page_pool.regroup(int(page_level))
+                changed = True
         if exec_group is not None and int(exec_group) != self.exec_group:
             self.exec_group = int(exec_group)
             steps = _shared_steps(self.cfg, self.use_ragged_kernel,
@@ -598,8 +768,11 @@ class ContinuousEngine:
             # ``self.exec_group`` records what this engine actually runs.
             self.plan = dataclasses.replace(
                 self.plan, preset=None,
-                vector=dataclasses.replace(self.plan.vector,
-                                           slots=self.pool.level))
+                vector=dataclasses.replace(
+                    self.plan.vector, slots=self.pool.level,
+                    pages=(self.page_pool.level
+                           if self.page_pool is not None
+                           else self.plan.vector.pages)))
         return changed
 
     def _retire(self, slot: int):
@@ -608,6 +781,14 @@ class ContinuousEngine:
         self.retire_steps[req.rid] = self._step_no
         self.done.append(req)
         self._slot_req[slot] = None
+        if self.page_pool is not None:
+            # return the pages AND sentinel the slot's device table row:
+            # a drained slot still rides the batched decode (horizon-1
+            # mode) and must not write into pages a new tenant now owns
+            self.page_pool.free(slot)
+            self._pt[slot] = sentinel(self.page_pool.total_pages)
+            self._cache["pt"] = self._cache["pt"].at[slot].set(
+                jnp.asarray(self._pt[slot]))
 
     # ----- external stepping ---------------------------------------------
     # The serving fabric (serve/fabric/) drives workers in virtual time, so
@@ -621,7 +802,18 @@ class ContinuousEngine:
             return
         b = self.n_slots
         self._t0 = time.perf_counter()
-        self._cache = self.model.init_cache(b, self.max_len, per_slot=True)
+        if self.page_pool is not None:
+            # shared physical pages + per-slot page tables; every table
+            # starts all-sentinel (no page mapped anywhere)
+            self._cache = self.model.init_cache(
+                b, self.max_len, per_slot=True, page_size=self.page_size,
+                n_pages=self.page_pool.total_pages)
+            self._pt = np.full(
+                (b, self.max_len // self.page_size),
+                sentinel(self.page_pool.total_pages), np.int32)
+        else:
+            self._cache = self.model.init_cache(b, self.max_len,
+                                                per_slot=True)
         self._slot_req = [None] * b
         self._next_tok = np.zeros(b, np.int32)
         self._remaining = np.zeros(b, np.int32)
@@ -639,6 +831,12 @@ class ContinuousEngine:
                 "has_eos": jnp.zeros(b, bool),
             }
         self._started = True
+
+    @property
+    def paged(self) -> bool:
+        """Whether this engine runs the paged KV-cache layout (the plan
+        asked AND the model supports it)."""
+        return self.page_pool is not None
 
     @property
     def n_active(self) -> int:
@@ -671,7 +869,23 @@ class ContinuousEngine:
         for slot in self.admissible_slots():
             if not self.queue:
                 break
+            if self.page_pool is not None:
+                # reserve the request's full worst-case page span up
+                # front (prompt + budget, capped at max_len) so decode
+                # never allocates mid-stream — safe under fused horizons.
+                # A dry pool DEFERS in FIFO order: the head request waits
+                # rather than being overtaken (pool state untouched).
+                req = self.queue[0]
+                span = min(len(req.prompt) + req.max_new_tokens,
+                           self.max_len)
+                need = max(1, -(-span // self.page_size))
+                if self.page_pool.alloc(slot, need) is None:
+                    break
+                self._pt[slot] = self.page_pool.table(slot)
             batch.append((slot, self.queue.popleft()))
+        if self.page_pool is not None:
+            self.stats["page_deferrals"] = self.page_pool.deferrals
+            self.stats["page_hwm"] = self.page_pool.hwm
         if not batch:
             return 0
         if self.prefill_buckets:

@@ -50,6 +50,7 @@ from repro.serve.engine import ContinuousEngine, Request
 from repro.serve.fabric.channels import DispatchChannel
 from repro.serve.fabric.placement import PlacementPolicy, make_policy
 from repro.serve.fabric.traffic import Arrival
+from repro.serve.pages import PagePool
 from repro.serve.slots import SlotPool
 
 
@@ -97,7 +98,10 @@ class SimWorker:
 
     def __init__(self, wid: int, *, n_slots: int = 4,
                  costs: FabricCosts = FabricCosts(),
-                 slot_level: int = 1, slot_category: Category = None):
+                 slot_level: int = 1, slot_category: Category = None,
+                 pages_level: int = 1, page_size: int = 0,
+                 max_len: int = 512,
+                 page_budget: Optional[int] = None):
         self.wid = wid
         self.n_slots = n_slots
         self.costs = costs
@@ -108,21 +112,47 @@ class SimWorker:
         self._slots: List[Optional[_Live]] = [None] * n_slots
         self.stats = {"steps": 0, "slot_steps": 0, "busy_slot_steps": 0,
                       "tokens": 0, "admitted": 0}
+        # ----- virtual page pool (DESIGN.md §13) -------------------------
+        # page_size > 0 engages KV-page accounting: admission reserves
+        # the request's worst-case page span from a shared PagePool, a
+        # dry pool defers the request into a FIFO waiting line (retried
+        # before every step), and completion frees the pages — the exact
+        # host bookkeeping the real engine does, in pure virtual time.
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.page_pool: Optional[PagePool] = None
+        self._waiting: List[Arrival] = []
+        if self.page_size > 0:
+            assert self.max_len % self.page_size == 0, \
+                "page_size must divide max_len"
+            self.page_pool = PagePool(
+                pages_level, n_slots, self.max_len // self.page_size,
+                total_pages=page_budget)
+            self.stats["page_deferrals"] = 0
+            self.stats["page_hwm"] = 0
 
     @property
     def n_active(self) -> int:
-        return sum(s is not None for s in self._slots)
+        return sum(s is not None for s in self._slots) \
+            + len(self._waiting)
 
     def regroup(self, slot_level: Optional[int] = None,
-                exec_group: Optional[int] = None) -> bool:
-        """Live migration: re-key the slot pool (admission policy only —
-        in-flight virtual requests keep their slots).  ``exec_group`` is
+                exec_group: Optional[int] = None,
+                page_level: Optional[int] = None) -> bool:
+        """Live migration: re-key the slot pool and/or the page-pool
+        budgets (pure admission/budget policy — in-flight virtual
+        requests keep their slots and pages).  ``exec_group`` is
         accepted for worker-protocol symmetry and ignored: a virtual
         worker compiles nothing."""
-        if slot_level is None or slot_level == self.pool.level:
-            return False
-        self.pool.regroup(slot_level)
-        return True
+        changed = False
+        if slot_level is not None and slot_level != self.pool.level:
+            self.pool.regroup(slot_level)
+            changed = True
+        if page_level is not None and self.page_pool is not None \
+                and int(page_level) != self.page_pool.level:
+            self.page_pool.regroup(int(page_level))
+            changed = True
+        return changed
 
     def compile_probe(self):
         """-> (key, count) for the window's jit-compile telemetry; a
@@ -131,22 +161,58 @@ class SimWorker:
 
     def capacity(self) -> int:
         occupied = [s is not None for s in self._slots]
-        return len(self.pool.admissible(occupied))
+        cap = len(self.pool.admissible(occupied))
+        # page-deferred requests already hold a place in line: don't let
+        # the router hand over more work than the pool can even queue
+        return max(0, cap - len(self._waiting))
 
-    def admit(self, arrival: Arrival, t_ns: float) -> float:
+    def _page_need(self, arrival: Arrival) -> int:
+        span = min(arrival.prompt_len + arrival.max_new_tokens,
+                   self.max_len)
+        return max(1, -(-span // self.page_size))
+
+    def _try_place(self, arrival: Arrival) -> bool:
+        """Bind ``arrival`` to an admissible slot, reserving its pages
+        first when the pool is paged; False defers (nothing granted)."""
         occupied = [s is not None for s in self._slots]
         slots = self.pool.admissible(occupied, queue_len=1)
-        assert slots, "admit() called with no admissible slot"
+        if not slots:
+            return False
+        if self.page_pool is not None and self.page_pool.alloc(
+                slots[0], self._page_need(arrival)) is None:
+            return False
         self._slots[slots[0]] = _Live(arrival,
                                       max(1, arrival.max_new_tokens))
         self.stats["admitted"] += 1
+        return True
+
+    def admit(self, arrival: Arrival, t_ns: float) -> float:
+        if self.page_pool is None:
+            ok = self._try_place(arrival)
+            assert ok, "admit() called with no admissible slot"
+        elif not self._try_place(arrival):
+            self._waiting.append(arrival)     # dry pool: FIFO defer
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
 
     def step(self, t_ns: float):
         """-> (cost_ns, completions finishing at t_ns + cost_ns)."""
+        if self._waiting:
+            # retry the deferred line in FIFO order; stop at the first
+            # request that still cannot fit (no overtaking)
+            while self._waiting and self._try_place(self._waiting[0]):
+                self._waiting.pop(0)
+        if self.page_pool is not None:
+            self.stats["page_deferrals"] = self.page_pool.deferrals
+            self.stats["page_hwm"] = self.page_pool.hwm
         live = [i for i, s in enumerate(self._slots) if s is not None]
         if not live:
+            if self._waiting:
+                # nothing live will ever free pages for these: the plan's
+                # budget cannot fit the request at all
+                raise ValueError(
+                    f"worker {self.wid}: {len(self._waiting)} request(s) "
+                    f"need more pages than the page budget ever grants")
             return 0.0, []
         cost = (self.costs.t_step_base_ns
                 + len(live) * self.costs.t_step_per_slot_ns)
@@ -164,6 +230,8 @@ class SimWorker:
                     rid=s.arrival.rid, worker=self.wid, t_done_ns=t_end,
                     new_tokens=s.arrival.max_new_tokens))
                 self._slots[i] = None
+                if self.page_pool is not None:
+                    self.page_pool.free(i)
         return cost, done
 
 
@@ -194,14 +262,24 @@ class EngineWorker:
     def n_active(self) -> int:
         return self.engine.n_active + len(self.engine.queue)
 
+    @property
+    def page_pool(self) -> Optional[PagePool]:
+        """The wrapped engine's page pool (None on contiguous layouts) —
+        the fleet report reads page telemetry through this."""
+        return self.engine.page_pool
+
     def regroup(self, slot_level: Optional[int] = None,
-                exec_group: Optional[int] = None) -> bool:
+                exec_group: Optional[int] = None,
+                page_level: Optional[int] = None) -> bool:
         """Live migration: delegate to the real engine — slot pool
         re-keyed without evicting in-flight requests, executable set
         swapped between jitted dispatches (new compiles allowed,
-        in-flight horizons finish on the old executable)."""
-        return self.engine.regroup(slot_level=slot_level,
-                                   exec_group=exec_group)
+        in-flight horizons finish on the old executable), page-pool
+        budgets re-keyed in place.  A pages level is quietly dropped on
+        contiguous-layout engines (the layout is structural)."""
+        return self.engine.regroup(
+            slot_level=slot_level, exec_group=exec_group,
+            page_level=(page_level if self.engine.paged else None))
 
     def compile_probe(self):
         """-> (step-set identity, jit specializations so far).  The key
@@ -276,6 +354,11 @@ class FleetReport:
     #: routers, which never owned the slot/exec axes)
     mean_footprint: Optional[float] = None
     n_windows: int = 0                        # telemetry windows sampled
+    #: peak live KV pages over the fleet as a fraction of the dedicated
+    #: reservation (n_slots x max_pages per worker); None when no worker
+    #: runs the paged layout
+    page_hwm_frac: Optional[float] = None
+    page_deferrals: int = 0                   # admissions the pools refused
 
     @property
     def n_completed(self) -> int:
@@ -480,11 +563,16 @@ class Router:
         compiles = self._fleet_compiles()
         d_compiles = compiles - self._win_compiles
         self._win_compiles = compiles
+        page_p = max((p.pressure() for p in
+                      (getattr(w, "page_pool", None)
+                       for w in self.workers) if p is not None),
+                     default=0.0)
         return WindowStats(
             occupancy=d_busy / d_slot if d_slot else 0.0,
             queue_depth=depth, lock_wait_ns=d_lock, p99_ms=p99,
             jit_compiles=max(0, d_compiles),
-            tokens=sum(c.new_tokens for c in fresh))
+            tokens=sum(c.new_tokens for c in fresh),
+            page_pressure=page_p)
 
     def _on_replan(self, t: float) -> None:
         self._n_windows += 1
@@ -536,6 +624,13 @@ class Router:
         if new.execs != old.execs:
             for i, w in enumerate(self.workers):
                 w.regroup(exec_group=new.exec_group_of(i, n))
+        if new.pages != old.pages:
+            # pure budget re-keying (PagePool.regroup): no page moves,
+            # token values invariant — workers without a pool ignore it
+            for w in self.workers:
+                w.regroup(page_level=new.pages)
+            for w in range(n):
+                self._wake(w, max(t, self._clock[w]))
         self.vector = new
         self.transitions.append((t, new))
 
@@ -587,6 +682,11 @@ class Router:
         per_worker = [0] * len(self.workers)
         for c in self.completions:
             per_worker[c.worker] += c.new_tokens
+        pools = [p for p in (getattr(w, "page_pool", None)
+                             for w in self.workers) if p is not None]
+        page_frac = (sum(p.hwm for p in pools)
+                     / max(1, sum(p.n_slots * p.max_pages for p in pools))
+                     if pools else None)
         return FleetReport(
             category=self.category,
             placement=self.policy.name,
@@ -606,6 +706,8 @@ class Router:
             transitions=list(self.transitions),
             mean_footprint=self._mean_footprint(makespan),
             n_windows=self._n_windows,
+            page_hwm_frac=page_frac,
+            page_deferrals=sum(p.deferrals for p in pools),
         )
 
 
@@ -613,7 +715,9 @@ def build_sim_fleet(n_workers: int, sharing, *,
                     n_slots: int = 4, placement: str = "round_robin",
                     costs: FabricCosts = FabricCosts(),
                     adapt: Optional[Replanner] = None,
-                    adapt_window_ns: float = 250_000.0) -> Router:
+                    adapt_window_ns: float = 250_000.0,
+                    page_size: int = 0, max_len: int = 512,
+                    page_budget: Optional[int] = None) -> Router:
     """The bench/test entrypoint: N virtual workers behind a router.
 
     ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
@@ -621,14 +725,25 @@ def build_sim_fleet(n_workers: int, sharing, *,
     ``SharingVector``/``EndpointPlan``, whose ``slots`` axis then also
     keys every worker's pool — the full off-diagonal plan space on the
     virtual fleet.  ``adapt`` attaches a live ``core.adapt.Replanner``
-    sampled every ``adapt_window_ns`` of virtual time."""
-    slot_level = 1
+    sampled every ``adapt_window_ns`` of virtual time.  ``page_size > 0``
+    gives every worker a virtual KV ``PagePool`` (budgeted by the
+    vector's ``pages`` axis and ``page_budget``, admission deferring when
+    dry) — the paged-serving bench path."""
+    slot_level, pages_level = 1, 1
     if isinstance(sharing, EndpointPlan):
+        if sharing.page_size and not page_size:
+            page_size = sharing.page_size
+        if sharing.page_budget is not None and page_budget is None:
+            page_budget = sharing.page_budget
+        max_len = sharing.max_len
         sharing = sharing.vector
     if isinstance(sharing, SharingVector):
         slot_level = sharing.slots
+        pages_level = sharing.pages
     workers = [SimWorker(w, n_slots=n_slots, costs=costs,
-                         slot_level=slot_level)
+                         slot_level=slot_level, pages_level=pages_level,
+                         page_size=page_size, max_len=max_len,
+                         page_budget=page_budget)
                for w in range(n_workers)]
     return Router(workers, sharing, placement=placement, costs=costs,
                   adapt=adapt, adapt_window_ns=adapt_window_ns)

@@ -18,6 +18,11 @@ A group admits new requests only when EVERY slot in it has drained — the
 slot-pool analogue of threads contending on a shared uUAR: the wider the
 sharing, the longer a finished request's slot idles behind its
 neighbours' stragglers.
+
+Since the paged KV cache (DESIGN.md §13) the pool governs *scheduling*
+admission only: cache MEMORY shares on its own ``pages`` axis through
+``serve.pages.PagePool``, so a slot that is admissible here may still
+defer on page budget — the memory analogue of a drained group.
 """
 
 from __future__ import annotations

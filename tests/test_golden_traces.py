@@ -56,6 +56,16 @@ FLEETS = (1, 4)
 CONFIGS = [(f"K{k}_{vname}_w{w}", k, vname, w)
            for k in HORIZONS for vname in VECTORS for w in FLEETS]
 
+#: Paged rows (DESIGN.md §13): the same canonical stream through the
+#: paged KV cache — page_size 16 (4 pages/slot at MAX_LEN=64), pages
+#: level 1 (dedicated per-slot budgets; the contiguous-equivalent
+#: layout) and level 4 (one shared pool per engine).
+PAGE_SIZE = 16
+PAGED_VECTORS = {p: SharingVector(slots=1, channels=1, execs=4, pages=p)
+                 for p in (1, 4)}
+PAGED_CONFIGS = [(f"K{k}_paged_p{p}_w{w}", k, p, w)
+                 for k in HORIZONS for p in (1, 4) for w in FLEETS]
+
 
 @functools.lru_cache(maxsize=None)
 def _served():
@@ -120,7 +130,9 @@ def golden(request):
         state["committed_configs"] = data["configs"]
     yield state
     if regen:
-        missing = {c[0] for c in CONFIGS} - state["configs"].keys()
+        missing = ({c[0] for c in CONFIGS}
+                   | {c[0] for c in PAGED_CONFIGS}) \
+            - state["configs"].keys()
         assert not missing, \
             f"--regen-goldens needs the full matrix in one session " \
             f"(deselect nothing); missing: {sorted(missing)}"
@@ -148,6 +160,65 @@ def test_matrix_matches_golden(golden, name, k, vname, workers):
         # the committed per-config hash is the tamper line: a config
         # silently dropped from the goldens would otherwise pass
         assert golden["committed_configs"][name] == _sha(tokens)
+
+
+@pytest.mark.parametrize("name,k,p,workers", PAGED_CONFIGS,
+                         ids=[c[0] for c in PAGED_CONFIGS])
+def test_paged_matrix_matches_golden(golden, name, k, p, workers):
+    """The paged cache is a memory-layout change, never a math change:
+    every paged config replays the exact contiguous golden stream."""
+    tokens, client = _run(k, PAGED_VECTORS[p], workers,
+                          page_size=PAGE_SIZE)
+    assert client.plan.paged and client.plan.vector.pages == p
+    assert tokens.keys() == golden["tokens"].keys()
+    for rid in tokens:
+        assert tokens[rid] == golden["tokens"][rid], \
+            f"{name}: stream {rid} diverged from the contiguous golden"
+    golden["configs"][name] = _sha(tokens)
+    if not golden["regen"]:
+        assert golden["committed_configs"][name] == _sha(tokens)
+
+
+def test_pages_replan_mid_stream_matches_golden(golden):
+    """Live pages migration: half the burst on dedicated page budgets,
+    ``client.replan`` pools them fleet-wide (pure accounting — no page
+    moves), the rest served after — one golden stream.  Flipping the
+    physical LAYOUT live (paged <-> contiguous) stays refused."""
+    cfg, params = _served()
+    client = serve.connect(cfg, PAGED_VECTORS[1], params=params,
+                           n_workers=4, n_slots=N_SLOTS, max_len=MAX_LEN,
+                           page_size=PAGE_SIZE)
+    trace = _trace()
+    out = {}
+    for a in trace[:12]:
+        client.submit(_prompt_of(cfg, a),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns)
+    out.update(client.run())
+    client.replan(PAGED_VECTORS[4])
+    assert client.plan.vector.pages == 4
+    assert all(w.page_pool.level == 4 for w in client.workers)
+    for a in trace[12:]:
+        client.submit(_prompt_of(cfg, a),
+                      max_new_tokens=a.max_new_tokens, at_ns=a.t_ns)
+    out.update(client.run())
+    tokens = {str(rid): list(map(int, t)) for rid, t in out.items()}
+    assert tokens == golden["tokens"]
+    golden["configs"]["pages_replan_p1to4_w4"] = _sha(tokens)
+    if not golden["regen"]:
+        assert golden["committed_configs"]["pages_replan_p1to4_w4"] \
+            == _sha(tokens)
+
+
+def test_layout_flip_replan_refused():
+    """paged <-> contiguous resizes every cache leaf — structural, so a
+    live replan that flips ``plan.paged`` must raise."""
+    cfg, params = _served()
+    client = serve.connect(cfg, SharingVector.diagonal(1), params=params,
+                           n_workers=1, n_slots=N_SLOTS, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="layout"):
+        client.replan(SharingVector(slots=1, channels=1, execs=1,
+                                    pages=4))
+    client.close()
 
 
 def test_adaptive_fleet_matches_golden(golden):

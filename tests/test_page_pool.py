@@ -1,0 +1,242 @@
+"""PagePool allocator invariants (DESIGN.md §13).
+
+The property-test contract the paged KV cache rests on: conservation
+(no page created or lost), no aliasing (live slots own disjoint page
+sets), determinism (identical op sequences replay identical tables),
+OOM-defers-not-corrupts (a refused alloc mutates nothing), and regroup
+never dropping a live mapping.  Everything here is pure host
+bookkeeping — no jax, no model.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.endpoints import level_group_size
+from repro.serve.pages import PagePool, sentinel
+
+LEVELS = st.integers(1, 4)
+
+
+def apply_ops(pool: PagePool, ops):
+    """Drive a pool through an op sequence: (slot, n) frees the slot if
+    it holds pages, else tries to alloc n for it.  -> the op log of
+    (kind, slot, result) — the determinism witness."""
+    log = []
+    for slot, n in ops:
+        if pool.pages_of(slot):
+            log.append(("free", slot, tuple(pool.free(slot))))
+        else:
+            got = pool.alloc(slot, n)
+            log.append(("alloc", slot,
+                        None if got is None else tuple(got)))
+    return log
+
+
+OPS = st.lists(st.tuples(st.integers(0, 5), st.integers(1, 8)),
+               min_size=0, max_size=40)
+
+
+# ----- construction / validation ------------------------------------------
+
+def test_pool_validation():
+    for bad in (0, 5, -1):
+        with pytest.raises(ValueError):
+            PagePool(bad, 4, 8)
+    with pytest.raises(ValueError):
+        PagePool(1, 0, 8)
+    with pytest.raises(ValueError):
+        PagePool(1, 4, 0)
+    with pytest.raises(ValueError):
+        PagePool(4, 4, 8, total_pages=0)
+
+
+def test_default_pool_is_the_dedicated_reservation():
+    pool = PagePool(1, 4, 8)
+    assert pool.total_pages == 32
+    # level 1: one slot per group, budget exactly max_pages — admission
+    # can never defer, the contiguous-cache equivalence
+    assert pool.group_size == 1
+    for g in range(pool.groups):
+        assert pool.group_budget(g) == 8
+    for s in range(4):
+        assert pool.alloc(s, 8) is not None
+    assert pool.free_pages == 0 and pool.deferrals == 0
+
+
+@pytest.mark.parametrize("level", [1, 2, 3, 4])
+def test_group_structure_follows_sharing_levels(level):
+    pool = PagePool(level, 8, 4)
+    assert pool.group_size == level_group_size(level, 8)
+    # groups tile the slots exactly once
+    seen = [pool.group_of(s) for s in range(8)]
+    assert seen == sorted(seen)
+    assert sum(pool.group_budget(g) for g in range(pool.groups)) \
+        <= pool.total_pages
+
+
+def test_alloc_errors():
+    pool = PagePool(4, 4, 8)
+    with pytest.raises(ValueError):
+        pool.alloc(4, 1)          # slot out of range
+    with pytest.raises(ValueError):
+        pool.alloc(0, 0)          # need >= 1
+    with pytest.raises(ValueError):
+        pool.alloc(0, 9)          # need <= max_pages
+    assert pool.alloc(0, 2) is not None
+    with pytest.raises(ValueError):
+        pool.alloc(0, 1)          # one allocation per residency
+
+
+def test_table_owned_first_sentinel_padded():
+    pool = PagePool(4, 4, 8)
+    got = pool.alloc(2, 3)
+    t = pool.table(2)
+    assert t.dtype == np.int32 and t.shape == (8,)
+    assert list(t[:3]) == got
+    assert all(t[3:] == sentinel(pool.total_pages))
+    # unallocated slot: all-sentinel
+    assert all(pool.table(0) == sentinel(pool.total_pages))
+
+
+def test_free_is_idempotent_and_returns_pages():
+    pool = PagePool(4, 4, 8)
+    got = pool.alloc(1, 4)
+    assert pool.free(1) == got
+    assert pool.free(1) == []            # benign double-free
+    assert pool.free_pages == pool.total_pages
+
+
+# ----- conservation + aliasing (property) ---------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(level=LEVELS, ops=OPS, budget=st.integers(6, 48))
+def test_conservation_and_no_aliasing(level, ops, budget):
+    pool = PagePool(level, 6, 8, total_pages=budget)
+    apply_ops(pool, ops)
+    owned = [pool.pages_of(s) for s in range(6)]
+    live = [p for pages in owned for p in pages]
+    # conservation: every page is free xor owned, exactly once
+    assert len(live) == len(set(live)) == pool.live_pages
+    assert pool.free_pages + pool.live_pages == pool.total_pages
+    assert sorted(live + sorted(pool._free)) == list(range(budget))
+    # no aliasing: the table rows of live slots are pairwise disjoint
+    for a in range(6):
+        for b in range(a + 1, 6):
+            assert not (set(owned[a]) & set(owned[b]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(level=LEVELS, ops=OPS)
+def test_group_budgets_never_exceeded(level, ops):
+    pool = PagePool(level, 6, 8)
+    for slot, n in ops:
+        if pool.pages_of(slot):
+            pool.free(slot)
+        else:
+            pool.alloc(slot, n)
+        for g in range(pool.groups):
+            assert pool.group_live(g) <= pool.group_budget(g)
+
+
+# ----- determinism (property) ---------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(level=LEVELS, ops=OPS)
+def test_identical_op_sequences_replay_identical_tables(level, ops):
+    a, b = PagePool(level, 6, 8), PagePool(level, 6, 8)
+    assert apply_ops(a, ops) == apply_ops(b, ops)
+    for s in range(6):
+        assert np.array_equal(a.table(s), b.table(s))
+    assert (a.deferrals, a.hwm) == (b.deferrals, b.hwm)
+
+
+def test_alloc_hands_out_lowest_numbered_pages_first():
+    pool = PagePool(4, 4, 8)
+    assert pool.alloc(0, 3) == [0, 1, 2]
+    assert pool.alloc(1, 2) == [3, 4]
+    pool.free(0)
+    # the freed low pages are reused before fresh high ones
+    assert pool.alloc(2, 4) == [0, 1, 2, 5]
+
+
+# ----- OOM defers, never corrupts (property) ------------------------------
+
+def snapshot(pool: PagePool):
+    return ([pool.table(s).tolist() for s in range(pool.n_slots)],
+            sorted(pool._free), pool.live_pages, pool.hwm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=OPS, budget=st.integers(4, 20))
+def test_failed_alloc_defers_and_mutates_nothing(ops, budget):
+    pool = PagePool(4, 6, 8, total_pages=budget)
+    for slot, n in ops:
+        if pool.pages_of(slot):
+            pool.free(slot)
+            continue
+        before = snapshot(pool)
+        defers_before = pool.deferrals
+        got = pool.alloc(slot, n)
+        if got is None:
+            assert pool.deferrals == defers_before + 1
+            assert snapshot(pool) == before     # nothing granted
+        else:
+            assert len(got) == n
+
+
+def test_oom_on_free_list_and_on_group_budget():
+    # free-list OOM: the whole pool is smaller than the need
+    pool = PagePool(4, 4, 8, total_pages=4)
+    assert pool.alloc(0, 5) is None and pool.deferrals == 1
+    # group-budget OOM: pages are free but the group's share is spent
+    pool = PagePool(2, 4, 8, total_pages=20)  # groups of 2, budget 10
+    assert pool.alloc(0, 8) is not None
+    assert pool.alloc(1, 4) is None           # 8 + 4 > 10; 12 pages free
+    assert pool.deferrals == 1
+    assert pool.alloc(2, 8) is not None       # group 1 is unaffected
+    assert pool.alloc(1, 2) is not None       # within the group budget
+
+
+# ----- regroup (property) -------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(level=LEVELS, new_level=LEVELS, ops=OPS)
+def test_regroup_never_drops_a_mapped_page(level, new_level, ops):
+    pool = PagePool(level, 6, 8)
+    apply_ops(pool, ops)
+    before = [pool.table(s).tolist() for s in range(6)]
+    live = pool.live_pages
+    pool.regroup(new_level)
+    assert pool.level == new_level
+    # pure accounting: every mapping (and the conservation sum) survives
+    assert [pool.table(s).tolist() for s in range(6)] == before
+    assert pool.live_pages == live
+    assert pool.free_pages + pool.live_pages == pool.total_pages
+    # future budgets answer to the new level
+    assert pool.group_size == level_group_size(new_level, 6)
+
+
+def test_regroup_shrink_gates_future_allocs_only():
+    pool = PagePool(4, 4, 4, total_pages=8)   # one shared pool of 8
+    assert pool.alloc(0, 4) is not None
+    assert pool.alloc(1, 4) is not None       # 8 live in one group
+    pool.regroup(1)                           # per-slot budget now 2
+    # over-budget holdings survive untouched...
+    assert pool.live_pages == 8
+    pool.free(0)
+    # ...but a fresh alloc obeys the new per-slot budget of 8//4 = 2
+    assert pool.alloc(0, 3) is None
+    assert pool.alloc(0, 2) is not None
+
+
+# ----- telemetry ----------------------------------------------------------
+
+def test_hwm_and_pressure_track_live_peak():
+    pool = PagePool(4, 4, 8, total_pages=16)
+    pool.alloc(0, 6)
+    pool.alloc(1, 6)
+    assert pool.hwm == 12 and pool.pressure() == 12 / 16
+    pool.free(0)
+    assert pool.pressure() == 6 / 16
+    assert pool.hwm == 12                    # peak, not current

@@ -1,0 +1,143 @@
+"""Observability overhead bench (DESIGN.md §14): the flight recorder +
+metrics registry against the zero-overhead-when-off contract.
+
+The obs fabric rides inside the virtual-time event loop, so the FIRST
+claim is exact, not statistical: with observability enabled the fleet's
+virtual schedule is BIT-IDENTICAL to the disabled run — tracing reads
+timestamps, it never advances them.  The bench runs the canonical
+deterministic bursty trace (8 workers, ``shared_dynamic``) three ways —
+obs defaulted off, obs explicitly the no-op bundle, obs fully enabled —
+and pins:
+
+* ``overhead_disabled_frac`` / ``overhead_enabled_frac``: relative
+  virtual-throughput deltas vs the defaulted run.  Deterministically 0.0
+  (gated near-exactly by ``check_regression``) — the paper-style budget
+  bands from ISSUE #7 (disabled < 1%, enabled < 5%) hold with margin ∞;
+* structural trace/metric volumes (events, series) — a silent drop in
+  coverage fails the gate the same way a perf slide would;
+* the exported trace passes ``obs.validate_trace`` (span conservation,
+  per-track serialization);
+* host wall time per mode (min-of-repeats, informational only — CI
+  hardware varies) plus a micro-bench of the per-event no-op guard, the
+  cost every un-instrumented run pays per emission site.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_obs
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import row, write_bench_json
+from repro.core.plan import SharingVector
+from repro.obs import NOOP_OBS, enabled_obs, validate_trace
+from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
+
+N_WORKERS = 8
+N_SLOTS = 4
+VECTOR = SharingVector(slots=2, channels=2, execs=2)
+REPEAT = 5
+
+
+def run_once(trace, obs=None):
+    router = build_sim_fleet(N_WORKERS, VECTOR, n_slots=N_SLOTS, obs=obs)
+    rep = router.run(trace)
+    assert rep.n_completed == rep.n_arrivals, rep.n_completed
+    return rep
+
+
+def timed_min(trace, obs_factory):
+    """Min-of-REPEAT host wall seconds (min, not mean: the estimator
+    robust to scheduler noise on shared CI hosts)."""
+    best, rep = float("inf"), None
+    for _ in range(REPEAT):
+        obs = obs_factory()
+        t0 = time.perf_counter()
+        rep = run_once(trace, obs=obs)
+        best = min(best, time.perf_counter() - t0)
+    return rep, best, obs
+
+
+def report_fingerprint(rep) -> tuple:
+    """Every virtual-time quantity the schedule determines; equal
+    fingerprints == bit-identical schedules."""
+    return (rep.makespan_ns, rep.total_new_tokens, rep.n_completed,
+            rep.occupancy, rep.lock_wait_ns,
+            tuple(sorted(rep.latency_ns.items())),
+            tuple(rep.per_worker_tokens))
+
+
+def guard_cost_ns(n: int = 200_000) -> float:
+    """Per-call cost of the no-op emission guard — the entire price a
+    disabled run pays at each instrumentation site."""
+    rec = NOOP_OBS.recorder
+    t0 = time.perf_counter()
+    for _ in range(n):
+        if rec.enabled:
+            rec.instant(1, 0, "x", 0.0)
+    dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        pass
+    return max(0.0, (dt - (time.perf_counter() - t0)) / n * 1e9)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    trace = canonical_bursty_trace()
+    rep_off, wall_off, _ = timed_min(trace, lambda: None)
+    rep_dis, wall_dis, _ = timed_min(trace, lambda: NOOP_OBS)
+    rep_on, wall_on, obs = timed_min(trace, enabled_obs)
+
+    fp = report_fingerprint(rep_off)
+    identical = (report_fingerprint(rep_dis) == fp
+                 and report_fingerprint(rep_on) == fp)
+    # virtual throughput is THE gated quantity: deterministic, so the
+    # overhead fractions are exactly 0.0 on every host
+    tps = rep_off.tok_per_s
+    dis_frac = abs(rep_dis.tok_per_s - tps) / tps
+    on_frac = abs(rep_on.tok_per_s - tps) / tps
+
+    doc = obs.recorder.to_chrome()
+    problems = validate_trace(doc)
+    n_events = len(doc["traceEvents"])
+    n_series = len(obs.metrics.names())
+    guard_ns = guard_cost_ns()
+
+    ok = (identical and not problems and dis_frac <= 0.01
+          and on_frac <= 0.05 and n_events > 0 and n_series > 0)
+    rows = [{"config": {
+        "mode": "overhead", "workers": N_WORKERS, "n_slots": N_SLOTS,
+        "vector": VECTOR.label, "trace": "canonical_bursty"},
+        "metrics": {
+            "tok_per_s": tps,
+            "overhead_disabled_frac": dis_frac,
+            "overhead_enabled_frac": on_frac,
+            "trace_events": n_events,
+            "metric_series": n_series,
+            "trace_valid": not problems,
+            "identical_reports": identical,
+            "tokens": rep_off.total_new_tokens,
+            "completed": rep_off.n_completed,
+            "wall_off_ms": wall_off * 1e3,
+            "wall_disabled_ms": wall_dis * 1e3,
+            "wall_enabled_ms": wall_on * 1e3,
+            "guard_ns_per_event": guard_ns,
+            "acceptance": ok}}]
+    row("obs_overhead", 1e3 / max(tps, 1e-9) * 1e6,
+        f"disabled={dis_frac * 100:.2f}%|enabled={on_frac * 100:.2f}%"
+        f"|{n_events}events|{n_series}series"
+        f"|wall {wall_off * 1e3:.1f}->{wall_on * 1e3:.1f}ms"
+        f"|guard={guard_ns:.0f}ns"
+        f"|acceptance={'PASS' if ok else 'FAIL'}")
+    assert ok, (identical, problems[:3], dis_frac, on_frac)
+
+    write_bench_json("obs", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

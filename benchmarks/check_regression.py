@@ -44,8 +44,11 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 BASELINE_DIR = os.path.join(HERE, "baselines")
 
 #: bench name -> deterministic in virtual time (gate perf metrics) or
-#: wall-clock (gate structure only, unless --wall-tolerance).
-VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged"}
+#: wall-clock (gate structure only, unless --wall-tolerance).  "obs"
+#: qualifies: its gated quantities (virtual throughput, trace/series
+#: volumes, the 0.0 overhead fractions) are all schedule-determined —
+#: only its ungated wall_*_ms fields touch the host clock.
+VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs"}
 
 #: metric -> (direction, kind).  direction: which way is WORSE ("either"
 #: gates both ways).  kind "perf" gates per the bench's time domain;
@@ -69,6 +72,15 @@ GATES: Dict[str, Tuple[str, str]] = {
     "compiles_admit": ("higher", "struct"),
     "compiles_prefill_exact": ("higher", "struct"),
     "compiles_horizon": ("higher", "struct"),
+    # observability (bench_obs): virtual-throughput overhead bands —
+    # deterministically 0.0, so any drift is a real zero-overhead-when-
+    # off violation — and trace/metric coverage volumes
+    "overhead_disabled_frac": ("higher", "struct"),
+    "overhead_enabled_frac": ("higher", "struct"),
+    "trace_events": ("either", "struct"),
+    "metric_series": ("either", "struct"),
+    "trace_valid": ("flag", "flag"),
+    "identical_reports": ("flag", "flag"),
     "acceptance": ("flag", "flag"),
 }
 

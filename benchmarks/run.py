@@ -20,6 +20,7 @@ BENCHES = [
     "bench_plan_space",
     "bench_adaptive",
     "bench_paged",
+    "bench_obs",
     "roofline",
 ]
 

@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.endpoints import Category
 from repro.core.plan import EndpointPlan, Hints, SharingVector
+from repro.obs import enabled_obs
 from repro.serve import connect
 from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, phased_trace, \
     poisson_trace, session_trace
@@ -366,6 +367,14 @@ def main(argv=None):
                     help="adaptation window in virtual microseconds "
                          "(fleet mode; the single engine converts it to "
                          "decode steps via the fabric cost model)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of "
+                         "the run (open at https://ui.perfetto.dev; "
+                         "DESIGN.md §14)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the unified metrics registry "
+                         "(counters/gauges/quantile sketches keyed by "
+                         "resource axis/group/worker) as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -391,11 +400,20 @@ def main(argv=None):
                  f"must fit max-len ({args.max_len}) in fleet mode")
     plan = build_plan(args, ap)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    client = connect(cfg, plan, seed=args.seed)
+    obs = enabled_obs() if (args.trace_out or args.metrics_out) else None
+    client = connect(cfg, plan, seed=args.seed, obs=obs)
     if plan.n_workers > 1:
         run_fleet(cfg, client, args)
     else:
         run_single(cfg, client, args)
+    if args.trace_out:
+        obs.recorder.dump(args.trace_out)
+        print(f"trace: {len(obs.recorder.events)} events -> "
+              f"{args.trace_out} (open at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        obs.metrics.dump(args.metrics_out)
+        print(f"metrics: {len(obs.metrics.names())} series -> "
+              f"{args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,8 @@ import numpy as np
 from repro.core.adapt import Replanner, WindowStats
 from repro.core.plan import EndpointPlan, Hints, SharingVector, as_plan
 from repro.models.model import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import (NOOP_OBS, Observability, PID_REQUESTS)
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 from repro.serve.fabric.placement import POLICIES
 from repro.serve.fabric.router import (Completion, EngineWorker,
@@ -118,13 +120,18 @@ class ServeClient:
     ``{rid: [tokens]}``; ``results`` accumulates across runs.
     """
 
-    def __init__(self, cfg, params, plan: EndpointPlan):
+    def __init__(self, cfg, params, plan: EndpointPlan,
+                 obs: Optional[Observability] = None):
         if plan.placement not in POLICIES:
             raise ValueError(f"unknown placement {plan.placement!r}; "
                              f"one of {sorted(POLICIES)}")
         self.cfg = cfg
         self.params = params
         self.plan = plan
+        #: observability bundle (DESIGN.md §14): defaults to the no-op
+        #: recorder/registry; ``connect(..., obs=enabled_obs())`` records
+        #: every run's spans + metrics for --trace-out / --metrics-out
+        self.obs = obs if obs is not None else NOOP_OBS
         self.executor = plan.resolved_executor
         self.results: Dict[int, List[int]] = {}
         self.report: Optional[FleetReport] = None   # last fleet report
@@ -267,8 +274,15 @@ class ServeClient:
         adapt = self._make_replanner() if self.plan.adaptive else None
         win_steps = max(1, int(self.plan.adapt_window_ns
                                // FabricCosts().t_step_base_ns))
-        mark = dict(eng.stats)
-        mark_compiles = eng.compile_count() if adapt is not None else 0
+        # single-engine window accounting runs through the same metrics
+        # fabric the fleet router uses (DESIGN.md §14): the engine
+        # publishes its absolute counters, the registry window diffs
+        # them — no hand-threaded stats-dict marks
+        reg = (self.obs.metrics if self.obs.metrics.enabled
+               else MetricsRegistry())
+        eng.publish_metrics(reg, worker=0)
+        win = reg.window()
+        step_mark = eng.stats["decode_steps"]
         while True:
             for sid in sorted(streams):
                 if inflight[sid] is None and streams[sid]:
@@ -284,27 +298,52 @@ class ServeClient:
                 if sid is not None and inflight.get(sid) == r.rid:
                     inflight[sid] = None
             if adapt is not None and eng.stats["decode_steps"] \
-                    - mark["decode_steps"] >= win_steps:
-                d_slot = eng.stats["slot_steps"] - mark["slot_steps"]
-                d_busy = eng.stats["busy_slot_steps"] \
-                    - mark["busy_slot_steps"]
-                mark = dict(eng.stats)
-                compiles = eng.compile_count()
-                d_compiles, mark_compiles = \
-                    compiles - mark_compiles, compiles
+                    - step_mark >= win_steps:
+                step_mark = eng.stats["decode_steps"]
+                eng.publish_metrics(reg, worker=0)
+                d_slot = win.delta("engine.slot_steps", axis="slots",
+                                   worker=0)
+                d_busy = win.delta("engine.busy_slot_steps", axis="slots",
+                                   worker=0)
+                d_compiles = win.delta_total("engine.jit_compiles")
+                win.roll()
                 vec = adapt.observe(WindowStats(
                     occupancy=d_busy / d_slot if d_slot else 0.0,
                     queue_depth=float(len(eng.queue)),
-                    jit_compiles=max(0, d_compiles), tokens=d_busy,
+                    jit_compiles=max(0, int(d_compiles)),
+                    tokens=int(d_busy),
                     page_pressure=(eng.page_pool.pressure()
                                    if eng.paged else 0.0)))
                 if vec is not None:
                     self._apply_vector(vec)
                     self.transitions.append((eng._step_no, vec))
+        eng.publish_metrics(reg, worker=0)
+        if self.obs.tracing:
+            self._record_engine_spans(out)
         if adapt is not None and adapt.vector != self.plan.vector:
             self.plan = dataclasses.replace(self.plan, preset=None,
                                             vector=adapt.vector)
         return out
+
+    def _record_engine_spans(self, out: Dict[int, List[int]]) -> None:
+        """Post-hoc request-lifecycle spans for the single continuous
+        engine: it runs closed-loop on the host clock, so spans are laid
+        out on the engine's deterministic step counter scaled by the
+        fabric cost model's step cost — the same virtual-ns axis fleet
+        traces use (wall clock never enters the trace)."""
+        rec = self.obs.recorder
+        base = FabricCosts().t_step_base_ns
+        eng = self.engine
+        for rid in sorted(out):
+            a = eng.admit_steps.get(rid)
+            r = eng.retire_steps.get(rid)
+            if a is None or r is None:
+                continue
+            rec.begin(PID_REQUESTS, "request", rid, a * base,
+                      args={"admit_step": a})
+            rec.end(PID_REQUESTS, "request", rid, r * base,
+                    args={"retire_step": r,
+                          "new_tokens": len(out[rid])})
 
     def _build_workers(self):
         plan = self.plan
@@ -354,7 +393,8 @@ class ServeClient:
         router = Router(self.workers, self.plan,
                         placement=self.plan.placement,
                         on_complete=on_complete, adapt=adapt,
-                        adapt_window_ns=self.plan.adapt_window_ns)
+                        adapt_window_ns=self.plan.adapt_window_ns,
+                        obs=self.obs)
         self.report = router.run(trace)
         if adapt is not None:
             self.transitions.extend(self.report.transitions)
@@ -481,16 +521,20 @@ class ServeClient:
 
 def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
                              None] = None, *,
-            params=None, seed: int = 0, **overrides) -> ServeClient:
+            params=None, seed: int = 0,
+            obs: Optional[Observability] = None,
+            **overrides) -> ServeClient:
     """Connect a serving session: resolve ``plan`` (an ``EndpointPlan``,
     ``Hints``, ``SharingVector``, ``Category``/preset name, or None for
     the default plan; ``overrides`` set/replace plan fields) and return a
     ``ServeClient`` over the executor the plan selects.  ``params``
-    defaults to freshly initialized weights (``seed``)."""
+    defaults to freshly initialized weights (``seed``).  ``obs`` (an
+    ``obs.Observability``, e.g. ``obs.enabled_obs()``) turns on the
+    flight recorder + metrics registry for every run."""
     resolved = as_plan(plan, **overrides)
     if params is None:
         params = Model(cfg).init(jax.random.PRNGKey(seed))
-    return ServeClient(cfg, params, resolved)
+    return ServeClient(cfg, params, resolved, obs=obs)
 
 
 # connect(..., adaptive=True) is the one-flag spelling of live

@@ -697,6 +697,32 @@ class ContinuousEngine:
         self.stats["prefilled_requests"] += len(batch)
         return cache
 
+    def publish_metrics(self, registry, worker: int = 0) -> None:
+        """Publish this engine's absolute counters into an
+        ``obs.MetricsRegistry`` (DESIGN.md §14) under a ``worker`` label.
+        ``set_total`` is idempotent, so any cadence is safe; the engine
+        keeps its ``stats`` dict authoritative and the registry mirrors
+        it — consumers (adaptive windows, ``--metrics-out``, the fleet
+        report) read the registry instead of threading stats dicts."""
+        for name, axis in (("decode_steps", "execs"),
+                           ("decode_calls", "execs"),
+                           ("host_syncs", "execs"),
+                           ("prefills", "execs"),
+                           ("prefilled_requests", "execs"),
+                           ("slot_steps", "slots"),
+                           ("busy_slot_steps", "slots"),
+                           ("regroups", "slots")):
+            registry.counter(f"engine.{name}", axis=axis,
+                             worker=worker).set_total(self.stats[name])
+        registry.counter("engine.jit_compiles", axis="execs",
+                         group=self.exec_group,
+                         worker=worker).set_total(self.compile_count())
+        registry.gauge("engine.queue_depth", axis="channels",
+                       worker=worker).set(len(self.queue))
+        if self.page_pool is not None:
+            self.page_pool.publish_metrics(registry, axis="pages",
+                                           worker=worker)
+
     def compile_count(self) -> int:
         """Jitted specializations materialized so far across this
         engine's executable set (jit's own per-shape cache sizes — the

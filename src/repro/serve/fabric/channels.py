@@ -17,16 +17,22 @@ from collections import deque
 from typing import Optional, Tuple
 
 from repro.core.ibsim.engine import Resource
+from repro.obs.trace import NOOP_RECORDER, PID_RESOURCES, TID_CHANNEL0
 
 
 class DispatchChannel:
-    """One dispatch queue shared by a group of workers."""
+    """One dispatch queue shared by a group of workers.
 
-    def __init__(self, cid: int, workers):
+    ``recorder`` (an ``obs.FlightRecorder``; default no-op) receives an
+    instant event per contended lock acquisition — the channel-lock-wait
+    telemetry of the flight recorder (DESIGN.md §14)."""
+
+    def __init__(self, cid: int, workers, recorder=None):
         self.cid = cid
         self.workers = tuple(workers)
         self._q: deque = deque()
         self.lock = Resource()
+        self._rec = recorder if recorder is not None else NOOP_RECORDER
         self.stats = {"enqueued": 0, "dequeued": 0,
                       "lock_wait_ns": 0.0, "lock_hold_ns": 0.0,
                       "peak_depth": 0, "win_peak_depth": 0}
@@ -52,8 +58,13 @@ class DispatchChannel:
 
     def _locked(self, t_ns: float, hold_ns: float) -> float:
         start, end = self.lock.acquire(t_ns, hold_ns)
-        self.stats["lock_wait_ns"] += start - t_ns
+        wait = start - t_ns
+        self.stats["lock_wait_ns"] += wait
         self.stats["lock_hold_ns"] += hold_ns
+        if wait > 0.0 and self._rec.enabled:
+            self._rec.instant(PID_RESOURCES, TID_CHANNEL0 + self.cid,
+                              "lock_wait", t_ns, cat="channels",
+                              args={"wait_ns": wait, "queue": self.cid})
         return end
 
     def push(self, t_ns: float, item, hold_ns: float) -> float:

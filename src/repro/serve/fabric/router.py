@@ -46,6 +46,10 @@ from repro.core.adapt import Replanner, WindowStats
 from repro.core.channels import DispatchPlan
 from repro.core.endpoints import Category, category_for_level
 from repro.core.plan import EndpointPlan, SharingVector
+from repro.obs.metrics import MetricsRegistry, quantile
+from repro.obs.trace import (NOOP_OBS, Observability, PID_FLEET,
+                             PID_REQUESTS, PID_RESOURCES, TID_CHANNEL0,
+                             TID_PAGES0, TID_ROUTER, TID_WORKER0)
 from repro.serve.engine import ContinuousEngine, Request
 from repro.serve.fabric.channels import DispatchChannel
 from repro.serve.fabric.placement import PlacementPolicy, make_policy
@@ -359,6 +363,12 @@ class FleetReport:
     #: runs the paged layout
     page_hwm_frac: Optional[float] = None
     page_deferrals: int = 0                   # admissions the pools refused
+    #: the run's metrics registry (DESIGN.md §14) — the report's
+    #: occupancy/lock-wait numbers are read back from it, and callers
+    #: can query any published counter/gauge/histogram (e.g. the
+    #: streaming ``request.latency_ms`` sketch) without new report fields
+    metrics: Optional[MetricsRegistry] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_completed(self) -> int:
@@ -369,10 +379,7 @@ class FleetReport:
         return self.total_new_tokens / max(self.makespan_ns, 1e-9) * 1e9
 
     def latency_percentile(self, q: float) -> float:
-        lat = sorted(self.latency_ns.values())
-        if not lat:
-            return 0.0
-        return lat[int(q * (len(lat) - 1))]
+        return quantile(self.latency_ns.values(), q)
 
     @property
     def fairness(self) -> float:
@@ -401,9 +408,20 @@ class Router:
                  costs: FabricCosts = FabricCosts(),
                  on_complete: Optional[Callable] = None,
                  adapt: Optional[Replanner] = None,
-                 adapt_window_ns: float = 250_000.0):
+                 adapt_window_ns: float = 250_000.0,
+                 obs: Optional[Observability] = None):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
+        # ----- observability (DESIGN.md §14) -----------------------------
+        # The flight recorder defaults to the no-op (hot paths pay one
+        # bool check), but window accounting ALWAYS runs through a real
+        # MetricsRegistry — obs.metrics when the caller wants the export,
+        # a private one otherwise — so the Replanner-feeding path is one
+        # code path, exercised identically with observability on or off.
+        self.obs = obs if obs is not None else NOOP_OBS
+        self._rec = self.obs.recorder
+        self.metrics = (self.obs.metrics if self.obs.metrics.enabled
+                        else MetricsRegistry())
         if adapt is not None and adapt_window_ns <= 0:
             raise ValueError("adapt_window_ns must be positive")
         if isinstance(sharing, EndpointPlan):
@@ -427,7 +445,9 @@ class Router:
         self.costs = costs
         self.on_complete = on_complete
         self.plan = DispatchPlan(plan_key, len(workers))
-        self.channels = [DispatchChannel(q, self.plan.workers_of(q))
+        self._chan_epoch = 0           # bumps per channel-plan migration
+        self.channels = [DispatchChannel(q, self.plan.workers_of(q),
+                                         recorder=self._rec)
                          for q in range(self.plan.n_queues)]
         self.policy: PlacementPolicy = make_policy(placement)
         # ----- online adaptation (DESIGN.md §12) -------------------------
@@ -445,18 +465,27 @@ class Router:
         self._lock_wait_retired = 0.0          # pre-migration channels
         self._foot_t = 0.0                     # footprint integration
         self._foot_acc = 0.0
-        # telemetry baselines for window deltas — snapshotted NOW, not
-        # zero: workers (and their engines' jit caches) persist across a
-        # ServeClient's runs while each run builds a fresh router, so a
-        # zero baseline would hand the first window the entire previous
-        # run's history as one giant delta
-        self._win_slot_steps = sum(w.stats["slot_steps"]
-                                   for w in workers)
-        self._win_busy_steps = sum(w.stats["busy_slot_steps"]
-                                   for w in workers)
-        self._win_lock_wait = 0.0              # channels are router-fresh
-        self._win_done = 0                     # completions index
-        self._win_compiles = self._fleet_compiles()
+        # telemetry baselines for window deltas — the registry window
+        # snapshots every counter NOW, not at zero: workers (and their
+        # engines' jit caches) persist across a ServeClient's runs while
+        # each run builds a fresh router, so a zero baseline would hand
+        # the first window the entire previous run's history as one
+        # giant delta.  ``_sync_metrics`` publishes the fleet's absolute
+        # totals first so the snapshot sees them.
+        self._done_ingested = 0                # completions index
+        self._sync_metrics()
+        self._mwin = self.metrics.window()
+        if self._rec.enabled:
+            self._rec.name_track(PID_FLEET, TID_ROUTER, "router")
+            for w in range(len(workers)):
+                self._rec.name_track(PID_FLEET, TID_WORKER0 + w,
+                                     f"worker {w}")
+                if getattr(workers[w], "page_pool", None) is not None:
+                    self._rec.name_track(PID_RESOURCES, TID_PAGES0 + w,
+                                         f"pages {w}")
+            for c in self.channels:
+                self._rec.name_track(PID_RESOURCES, TID_CHANNEL0 + c.cid,
+                                     f"channel {c.cid}")
         # scheduler state
         self._heap: list = []
         self._seq = 0
@@ -488,6 +517,13 @@ class Router:
                  for c in self.channels]
         qid = self.policy.choose(arr, depths, loads)
         released = self.channels[qid].push(t, arr, self.costs.t_enqueue_ns)
+        if self._rec.enabled:
+            # the queue-wait span is keyed by (rid, channel epoch) so a
+            # migration's drain + re-place opens a fresh span instead of
+            # colliding with the one the drain closed
+            self._rec.begin(PID_REQUESTS, "queue",
+                            f"{arr.rid}q{self._chan_epoch}", t,
+                            cat="queue", args={"queue": qid})
         for w in self.channels[qid].workers:
             self._wake(w, max(released, self._clock[w]))
 
@@ -495,6 +531,10 @@ class Router:
         if arr.rid in self._arrivals:
             raise ValueError(f"duplicate rid {arr.rid}")
         self._arrivals[arr.rid] = arr
+        if self._rec.enabled:
+            self._rec.begin(PID_REQUESTS, "request", arr.rid, t,
+                            args={"prompt_len": arr.prompt_len,
+                                  "max_new": arr.max_new_tokens})
         self._place(t, arr)
 
     def _on_wake(self, t: float, w: int) -> None:
@@ -502,14 +542,49 @@ class Router:
         t = max(t, self._clock[w])
         worker = self.workers[w]
         chan = self.channels[self.plan.queue_of(w)]
+        rec, tracing = self._rec, self._rec.enabled
+        if tracing:
+            # instant-event probes: page deferrals and jit compiles show
+            # up as counter jumps across this wake's admissions + step
+            pool = getattr(worker, "page_pool", None)
+            defer0 = pool.deferrals if pool is not None else 0
+            probe = getattr(worker, "compile_probe", None)
+            comp0 = probe()[1] if probe is not None else 0
         while worker.capacity() > 0 and len(chan) > 0:
             arr, t = chan.pop(t, self.costs.t_dequeue_ns)
             if arr is None:       # a sibling drained it first
                 break
+            if tracing:
+                rec.end(PID_REQUESTS, "queue",
+                        f"{arr.rid}q{self._chan_epoch}", t, cat="queue")
+            t0 = t
             t += worker.admit(arr, t)
+            if tracing:
+                rec.complete(PID_FLEET, TID_WORKER0 + w, "admit", t0,
+                             t - t0, cat="admit", args={"rid": arr.rid})
         cost, done = worker.step(t)
+        if tracing:
+            if pool is not None and pool.deferrals > defer0:
+                rec.instant(PID_RESOURCES, TID_PAGES0 + w,
+                            "page_deferral", t, cat="pages",
+                            args={"count": pool.deferrals - defer0,
+                                  "worker": w})
+            if probe is not None:
+                comp1 = probe()[1]
+                if comp1 > comp0:
+                    rec.instant(PID_FLEET, TID_WORKER0 + w, "jit_compile",
+                                t, cat="execs",
+                                args={"count": comp1 - comp0, "worker": w})
         if cost > 0.0:
             t_end = t + cost
+            if tracing:
+                rec.complete(PID_FLEET, TID_WORKER0 + w, "step", t, cost,
+                             cat="step", args={"worker": w,
+                                               "retired": len(done)})
+                for c in done:
+                    rec.end(PID_REQUESTS, "request", c.rid, t_end,
+                            args={"worker": c.worker,
+                                  "new_tokens": c.new_tokens})
             self.completions.extend(done)
             if self.on_complete is not None:
                 for c in done:
@@ -539,44 +614,125 @@ class Router:
             compiles += count
         return compiles
 
+    def _sync_metrics(self) -> None:
+        """Publish the fleet's absolute resource counters into the
+        registry — the metrics fabric (DESIGN.md §14).  ``set_total`` is
+        idempotent, so syncing is safe at any cadence; every label set
+        carries the resource axis it describes (the serving analogue of
+        the paper's per-resource CTX/PD/CQ/QP counters)."""
+        m = self.metrics
+        for w, worker in enumerate(self.workers):
+            st = worker.stats
+            m.counter("worker.slot_steps", axis="slots",
+                      worker=w).set_total(st["slot_steps"])
+            m.counter("worker.busy_slot_steps", axis="slots",
+                      worker=w).set_total(st["busy_slot_steps"])
+            m.counter("worker.admitted", axis="slots",
+                      worker=w).set_total(st["admitted"])
+            eng = getattr(worker, "engine", None)
+            if eng is not None:
+                eng.publish_metrics(m, worker=w)
+            else:
+                pool = getattr(worker, "page_pool", None)
+                if pool is not None:
+                    pool.publish_metrics(m, axis="pages", worker=w)
+        for c in self.channels:
+            m.counter("channel.lock_wait_ns", axis="channels",
+                      group=c.cid, epoch=self._chan_epoch).set_total(
+                          c.stats["lock_wait_ns"])
+            m.counter("channel.enqueued", axis="channels", group=c.cid,
+                      epoch=self._chan_epoch).set_total(
+                          c.stats["enqueued"])
+            m.gauge("channel.peak_depth", axis="channels", group=c.cid,
+                    epoch=self._chan_epoch).set(c.stats["peak_depth"])
+        # fleet rollups: retired channels (pre-migration) fold into ONE
+        # monotone total, and the dedup'd compile count covers shared
+        # executable sets once
+        m.counter("fleet.lock_wait_ns", axis="channels").set_total(
+            self._lock_wait_retired
+            + sum(c.stats["lock_wait_ns"] for c in self.channels))
+        m.counter("exec.jit_compiles", axis="execs").set_total(
+            self._fleet_compiles())
+
+    def _ingest_completions(self) -> List[Completion]:
+        """Feed completions not yet seen by the metrics fabric into the
+        registry (tokens delivered + the streaming latency sketch); ->
+        the freshly ingested slice."""
+        fresh = self.completions[self._done_ingested:]
+        self._done_ingested = len(self.completions)
+        if fresh:
+            m = self.metrics
+            for c in fresh:
+                lat_ms = (c.t_done_ns - self._arrivals[c.rid].t_ns) / 1e6
+                m.counter("request.tokens",
+                          worker=c.worker).inc(c.new_tokens)
+                m.counter("fleet.completed").inc()
+                m.histogram("request.latency_ms",
+                            worker=c.worker).observe(lat_ms)
+        return fresh
+
     def _window_stats(self, t: float) -> WindowStats:
-        """Telemetry delta since the last adaptation window — every field
-        comes from counters the fabric already keeps."""
-        slot_steps = sum(w.stats["slot_steps"] for w in self.workers)
-        busy = sum(w.stats["busy_slot_steps"] for w in self.workers)
-        d_slot = slot_steps - self._win_slot_steps
-        d_busy = busy - self._win_busy_steps
-        self._win_slot_steps, self._win_busy_steps = slot_steps, busy
-        lock = self._lock_wait_retired \
-            + sum(c.stats["lock_wait_ns"] for c in self.channels)
-        d_lock, self._win_lock_wait = lock - self._win_lock_wait, lock
-        fresh = self.completions[self._win_done:]
-        self._win_done = len(self.completions)
+        """Telemetry delta since the last adaptation window, read from
+        the metrics registry (DESIGN.md §14): the fabric publishes its
+        absolute counters, the registry window reports what accrued."""
+        m, win = self.metrics, self._mwin
+        self._sync_metrics()
+        fresh = self._ingest_completions()
+        d_slot = win.delta_total("worker.slot_steps")
+        d_busy = win.delta_total("worker.busy_slot_steps")
+        d_lock = win.delta("fleet.lock_wait_ns", axis="channels")
+        d_compiles = win.delta("exec.jit_compiles", axis="execs")
+        d_tokens = win.delta_total("request.tokens")
         # p99 and lock wait drive no pressure today — they ride along so
         # the window record matches what operators (and future policies)
-        # see; windows are small, the sort is cheap
-        lat = sorted(c.t_done_ns - self._arrivals[c.rid].t_ns
-                     for c in fresh)
-        p99 = lat[int(0.99 * (len(lat) - 1))] / 1e6 if lat else 0.0
-        depth = max((c.reset_window() / max(1, len(c.workers))
-                     for c in self.channels), default=0.0)
-        compiles = self._fleet_compiles()
-        d_compiles = compiles - self._win_compiles
-        self._win_compiles = compiles
-        page_p = max((p.pressure() for p in
-                      (getattr(w, "page_pool", None)
-                       for w in self.workers) if p is not None),
-                     default=0.0)
+        # see.  The window p99 is EXACT (obs.quantile over the window's
+        # raw latencies); the registry's request.latency_ms sketch is the
+        # streaming estimate for whole-run export.
+        lat = [c.t_done_ns - self._arrivals[c.rid].t_ns for c in fresh]
+        p99 = quantile(lat, 0.99) / 1e6
+        for c in self.channels:
+            m.gauge("channel.window_peak_depth", axis="channels",
+                    group=c.cid, epoch=self._chan_epoch).set(
+                        c.reset_window())
+        depth = max((m.value("channel.window_peak_depth", axis="channels",
+                             group=c.cid, epoch=self._chan_epoch)
+                     / max(1, len(c.workers)) for c in self.channels),
+                    default=0.0)
+        page_p = 0.0
+        for w, worker in enumerate(self.workers):
+            if getattr(worker, "page_pool", None) is not None:
+                page_p = max(page_p, m.value("pages.pressure",
+                                             axis="pages", worker=w))
+        if self._rec.enabled:
+            for c in self.channels:
+                self._rec.counter(PID_RESOURCES, TID_CHANNEL0 + c.cid,
+                                  "queue_depth", t, {"depth": len(c)})
+            for w, worker in enumerate(self.workers):
+                pool = getattr(worker, "page_pool", None)
+                if pool is not None:
+                    self._rec.counter(PID_RESOURCES, TID_PAGES0 + w,
+                                      "page_pressure", t,
+                                      {"live_frac": pool.pressure()})
+        win.roll()
         return WindowStats(
             occupancy=d_busy / d_slot if d_slot else 0.0,
             queue_depth=depth, lock_wait_ns=d_lock, p99_ms=p99,
-            jit_compiles=max(0, d_compiles),
-            tokens=sum(c.new_tokens for c in fresh),
+            jit_compiles=max(0, int(d_compiles)),
+            tokens=int(d_tokens),
             page_pressure=page_p)
 
     def _on_replan(self, t: float) -> None:
         self._n_windows += 1
-        proposal = self.adapt.observe(self._window_stats(t))
+        stats = self._window_stats(t)
+        self.metrics.counter("fleet.windows").inc()
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "window", t,
+                              cat="adapt",
+                              args={"window": self._n_windows,
+                                    "occupancy": stats.occupancy,
+                                    "queue_depth": stats.queue_depth,
+                                    "page_pressure": stats.page_pressure})
+        proposal = self.adapt.observe(stats)
         if proposal is not None:
             self.apply_vector(t, proposal)
         if self._heap:
@@ -603,15 +759,39 @@ class Router:
         """
         old, n = self.vector, len(self.workers)
         self._integrate_footprint(t)
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "replan", t,
+                              cat="adapt",
+                              args={"from": old.label, "to": new.label,
+                                    "slots": new.slots,
+                                    "channels": new.channels,
+                                    "execs": new.execs,
+                                    "pages": new.pages})
+        self.metrics.counter("fleet.transitions").inc()
         if new.channels != old.channels:
             pending = [a for c in self.channels for a in c.drain()]
             pending.sort(key=lambda a: (a.t_ns, a.rid))
+            # final lock totals of the retiring channel set land in the
+            # registry under their epoch before the labels freeze
+            self._sync_metrics()
+            if self._rec.enabled:
+                for arr in pending:
+                    self._rec.end(PID_REQUESTS, "queue",
+                                  f"{arr.rid}q{self._chan_epoch}", t,
+                                  cat="queue")
             self._lock_wait_retired += sum(
                 c.stats["lock_wait_ns"] for c in self.channels)
             self.plan = DispatchPlan(new.channels, n)
-            self.channels = [DispatchChannel(q, self.plan.workers_of(q))
+            self._chan_epoch += 1
+            self.channels = [DispatchChannel(q, self.plan.workers_of(q),
+                                             recorder=self._rec)
                              for q in range(self.plan.n_queues)]
             self.category = category_for_level(new.channels)
+            if self._rec.enabled:
+                for c in self.channels:
+                    self._rec.name_track(PID_RESOURCES,
+                                         TID_CHANNEL0 + c.cid,
+                                         f"channel {c.cid}")
             for arr in pending:
                 self._place(t, arr)
         if new.slots != old.slots:
@@ -668,14 +848,21 @@ class Router:
             else:
                 self._on_wake(t, data)
 
+        # final publish: the report below is a VIEW over the registry —
+        # its occupancy and lock-wait numbers are read back from the
+        # published counters, and the registry itself rides along on the
+        # ``metrics`` field for any deeper query (or --metrics-out)
+        self._sync_metrics()
+        self._ingest_completions()
+        m = self.metrics
         latency = {}
         for c in self.completions:
             arr = self._arrivals[c.rid]
             latency[c.rid] = c.t_done_ns - arr.t_ns
         makespan = max((c.t_done_ns for c in self.completions),
                        default=0.0)
-        slot_steps = sum(w.stats["slot_steps"] for w in self.workers)
-        busy = sum(w.stats["busy_slot_steps"] for w in self.workers)
+        slot_steps = m.total("worker.slot_steps")
+        busy = m.total("worker.busy_slot_steps")
         # derived from completions (not worker step counters) so it sums
         # exactly to total_new_tokens even when an engine's budget-
         # exhaustion path emits a final extra token
@@ -698,8 +885,7 @@ class Router:
             total_new_tokens=sum(c.new_tokens for c in self.completions),
             per_worker_tokens=per_worker,
             occupancy=busy / slot_steps if slot_steps else 0.0,
-            lock_wait_ns=self._lock_wait_retired
-            + sum(c.stats["lock_wait_ns"] for c in self.channels),
+            lock_wait_ns=m.value("fleet.lock_wait_ns", axis="channels"),
             peak_depths=[c.stats["peak_depth"] for c in self.channels],
             endpoint_usage=self.plan.endpoint_usage(),
             vector=self.vector,
@@ -708,6 +894,7 @@ class Router:
             n_windows=self._n_windows,
             page_hwm_frac=page_frac,
             page_deferrals=sum(p.deferrals for p in pools),
+            metrics=m,
         )
 
 
@@ -717,7 +904,8 @@ def build_sim_fleet(n_workers: int, sharing, *,
                     adapt: Optional[Replanner] = None,
                     adapt_window_ns: float = 250_000.0,
                     page_size: int = 0, max_len: int = 512,
-                    page_budget: Optional[int] = None) -> Router:
+                    page_budget: Optional[int] = None,
+                    obs: Optional[Observability] = None) -> Router:
     """The bench/test entrypoint: N virtual workers behind a router.
 
     ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
@@ -746,4 +934,4 @@ def build_sim_fleet(n_workers: int, sharing, *,
                          page_budget=page_budget)
                for w in range(n_workers)]
     return Router(workers, sharing, placement=placement, costs=costs,
-                  adapt=adapt, adapt_window_ns=adapt_window_ns)
+                  adapt=adapt, adapt_window_ns=adapt_window_ns, obs=obs)

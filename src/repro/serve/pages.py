@@ -164,6 +164,17 @@ class PagePool:
         t[:len(pages)] = pages
         return t
 
+    # ----- observability --------------------------------------------------
+    def publish_metrics(self, registry, **labels) -> None:
+        """Publish this pool's counters into an ``obs.MetricsRegistry``
+        under ``labels`` (callers pass ``axis="pages", worker=w`` — the
+        paper-style per-resource counter convention, DESIGN.md §14)."""
+        registry.counter("pages.deferrals", **labels).set_total(
+            self.deferrals)
+        registry.gauge("pages.hwm", **labels).set(self.hwm)
+        registry.gauge("pages.live", **labels).set(self.live_pages)
+        registry.gauge("pages.pressure", **labels).set(self.pressure())
+
     # ----- live migration -------------------------------------------------
     def regroup(self, level: int) -> "PagePool":
         """Re-key the budget groups to a new pages level IN PLACE (the

@@ -1,0 +1,415 @@
+"""Observability fabric tests (DESIGN.md §14): the quantile helpers,
+the metrics registry + windows, flight-recorder trace integrity, and
+the zero-overhead / bit-exactness contracts the rest of the serving
+stack now leans on.
+
+The golden half pins THE committed flight-recorder export
+(``tests/golden/obs_trace.json``) for a small adaptive fleet run on the
+canonical bursty trace; regenerate after an intentional span-model
+change with
+
+  PYTHONPATH=src python -m pytest tests/test_obs.py --regen-goldens -q
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core.adapt import Replanner
+from repro.core.plan import SharingVector
+from repro.obs import (NOOP_OBS, NOOP_RECORDER, NOOP_REGISTRY,
+                       FlightRecorder, MetricsRegistry, Observability,
+                       QuantileSketch, enabled_obs, quantile,
+                       validate_trace)
+from repro.obs.trace import (PID_FLEET, PID_REQUESTS, PID_RESOURCES,
+                             TID_ROUTER)
+from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "obs_trace.json"
+VECTOR = SharingVector(slots=2, channels=2, execs=2)
+
+
+# ---------------------------------------------------------------------------
+# quantile: THE percentile definition (satellite: dedup)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [0.0, 0.5, 0.9, 0.99, 1.0])
+def test_quantile_matches_historical_inline_formula(q):
+    """The router's old inline p99 and FleetReport.latency_percentile
+    both computed ``sorted(v)[int(q * (len(v) - 1))]``; the shared
+    helper must be bit-identical to that formula."""
+    for vals in ([3.0], [5.0, 1.0], [7.0, 2.0, 9.0, 4.0, 6.0],
+                 list(range(100, 0, -1))):
+        assert quantile(vals, q) == sorted(vals)[int(q * (len(vals) - 1))]
+
+
+def test_quantile_empty_and_clamped():
+    assert quantile([], 0.99) == 0.0
+    assert quantile([4.0, 2.0], -1.0) == 2.0
+    assert quantile([4.0, 2.0], 2.0) == 4.0
+
+
+def test_fleet_report_percentile_is_the_shared_helper():
+    rep = build_sim_fleet(4, VECTOR).run(canonical_bursty_trace()[:24])
+    lat = rep.latency_ns.values()
+    for q in (0.5, 0.9, 0.99):
+        assert rep.latency_percentile(q) == quantile(lat, q)
+
+
+# ---------------------------------------------------------------------------
+# QuantileSketch: accuracy bound, merge/minus, determinism
+# ---------------------------------------------------------------------------
+
+def _stream(n=4000):
+    """Deterministic heavy-tailed positive samples (no RNG: tests must
+    not depend on numpy's stream)."""
+    return [((i * 2654435761) % 9973 + 1) ** 1.5 for i in range(n)]
+
+
+@pytest.mark.parametrize("rel_err", [0.01, 0.05])
+def test_sketch_relative_error_bound(rel_err):
+    s = QuantileSketch(rel_err)
+    vals = _stream()
+    for v in vals:
+        s.add(v)
+    for q in (0.1, 0.5, 0.9, 0.99, 0.999):
+        true = quantile(vals, q)
+        assert abs(s.quantile(q) - true) <= rel_err * true + 1e-9
+
+
+def test_sketch_merge_equals_concatenation():
+    vals = _stream()
+    a, b, c = QuantileSketch(), QuantileSketch(), QuantileSketch()
+    for v in vals[:1500]:
+        a.add(v)
+    for v in vals[1500:]:
+        b.add(v)
+    for v in vals:
+        c.add(v)
+    a.merge(b)
+    assert a.n == c.n and a.sum == pytest.approx(c.sum)
+    assert a._buckets == c._buckets
+    assert a.quantile(0.99) == c.quantile(0.99)
+    with pytest.raises(ValueError, match="rel_err"):
+        a.merge(QuantileSketch(0.2))
+
+
+def test_sketch_minus_is_the_window_tail():
+    s = QuantileSketch()
+    head, tail = _stream()[:1000], _stream()[1000:]
+    for v in head:
+        s.add(v)
+    snap = s.snapshot()
+    for v in tail:
+        s.add(v)
+    win = s.minus(snap)
+    fresh = QuantileSketch()
+    for v in tail:
+        fresh.add(v)
+    assert win.n == fresh.n and win._buckets == fresh._buckets
+
+
+def test_sketch_zero_and_negative_samples():
+    s = QuantileSketch()
+    for v in (0.0, -3.0, 5.0):
+        s.add(v)
+    assert s.n == 3 and s.quantile(0.0) == 0.0
+    assert abs(s.quantile(1.0) - 5.0) <= 0.01 * 5.0
+
+
+def test_sketch_export_deterministic():
+    a, b = QuantileSketch(), QuantileSketch()
+    for v in _stream(500):
+        a.add(v)
+        b.add(v)
+    assert json.dumps(a.to_json(), sort_keys=True) \
+        == json.dumps(b.to_json(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry + windows
+# ---------------------------------------------------------------------------
+
+def test_registry_label_keying_and_totals():
+    m = MetricsRegistry()
+    m.counter("x", axis="slots", worker=0).inc(3)
+    m.counter("x", axis="slots", worker=1).inc(4)
+    m.counter("x", worker=0, axis="slots").inc()      # same label set
+    assert m.value("x", axis="slots", worker=0) == 4.0
+    assert m.total("x") == 8.0
+    assert m.names() == ["x"]
+    m.gauge("g", axis="pages").set(2.5)
+    m.gauge("g", axis="pages").max_of(1.0)            # keeps the max
+    assert m.value("g", axis="pages") == 2.5
+
+
+def test_registry_set_total_idempotent():
+    m = MetricsRegistry()
+    for _ in range(3):
+        m.counter("abs", worker=0).set_total(42)
+    assert m.value("abs", worker=0) == 42.0
+
+
+def test_window_deltas_and_roll():
+    m = MetricsRegistry()
+    c = m.counter("work", worker=0)
+    c.set_total(100)                     # pre-window history
+    win = m.window()
+    assert win.delta("work", worker=0) == 0.0      # baseline is NOW
+    c.set_total(130)
+    m.counter("work", worker=1).inc(7)   # label born inside the window
+    assert win.delta("work", worker=0) == 30.0
+    assert win.delta_total("work") == 37.0
+    win.roll()
+    assert win.delta_total("work") == 0.0
+
+
+def test_window_delta_histogram():
+    m = MetricsRegistry()
+    h = m.histogram("lat", worker=0)
+    h.observe(10.0)
+    win = m.window()
+    for v in (20.0, 30.0, 40.0):
+        h.observe(v)
+    d = win.delta_histogram("lat", worker=0)
+    assert d.n == 3
+    assert abs(d.quantile(1.0) - 40.0) <= 0.5
+    assert m.merged_histogram("lat").n == 4
+
+
+def test_registry_export_shape():
+    m = MetricsRegistry()
+    m.counter("c", axis="channels", group=1).inc(2)
+    m.histogram("h").observe(1.0)
+    doc = m.to_json()
+    assert doc["schema"] == "repro-metrics-v1"
+    assert doc["metrics"]["c"][0] == {
+        "labels": {"axis": "channels", "group": "1"},
+        "kind": "counter", "value": 2.0}
+    assert doc["metrics"]["h"][0]["kind"] == "histogram"
+    assert doc["metrics"]["h"][0]["count"] == 1
+
+
+def test_noop_surfaces_are_inert():
+    assert not NOOP_REGISTRY.enabled and not NOOP_RECORDER.enabled
+    assert not NOOP_OBS.enabled and not NOOP_OBS.tracing
+    NOOP_REGISTRY.counter("x", worker=0).inc(5)
+    assert NOOP_REGISTRY.total("x") == 0.0 and NOOP_REGISTRY.names() == []
+    NOOP_RECORDER.complete(1, 0, "x", 0.0, 1.0)
+    NOOP_RECORDER.instant(1, 0, "x", 0.0)
+    assert NOOP_RECORDER.to_chrome()["traceEvents"] == []
+    assert enabled_obs().enabled and enabled_obs().tracing
+
+
+# ---------------------------------------------------------------------------
+# flight-recorder trace integrity (satellite: invariants + golden)
+# ---------------------------------------------------------------------------
+
+def _traced_run(adaptive=True):
+    trace = canonical_bursty_trace()[:16]
+    obs = enabled_obs()
+    adapt = Replanner(VECTOR, n_workers=4, n_slots=4) if adaptive \
+        else None
+    rep = build_sim_fleet(4, VECTOR, adapt=adapt,
+                          adapt_window_ns=100_000.0, obs=obs).run(trace)
+    assert rep.n_completed == len(trace)
+    return rep, obs
+
+
+@pytest.fixture(scope="module")
+def traced():
+    rep, obs = _traced_run()
+    return rep, obs, obs.recorder.to_chrome()
+
+
+def test_trace_validates_clean(traced):
+    _, _, doc = traced
+    assert validate_trace(doc) == []
+    assert doc["traceEvents"], "recorder captured nothing"
+
+
+def test_request_span_conservation(traced):
+    """Every arrival opens exactly one request span and every retirement
+    closes it — arrivals in == deliveries out, per rid."""
+    rep, _, doc = traced
+    begins = [e for e in doc["traceEvents"]
+              if e["ph"] == "b" and e["name"] == "request"]
+    ends = [e for e in doc["traceEvents"]
+            if e["ph"] == "e" and e["name"] == "request"]
+    assert {e["id"] for e in begins} == {e["id"] for e in ends} \
+        == {str(rid) for rid in rep.latency_ns}
+    assert len(begins) == len(ends) == rep.n_arrivals == rep.n_completed
+
+
+def test_queue_spans_pair_and_nest_in_lifecycle(traced):
+    """Queue-wait spans (keyed rid + channel epoch) pair up and sit
+    inside their request's arrival..retire interval."""
+    _, _, doc = traced
+    life = {}
+    for e in doc["traceEvents"]:
+        if e["name"] == "request" and e["ph"] in "be":
+            life.setdefault(e["id"], {})[e["ph"]] = e["ts"]
+    opened = {}
+    n_queue = 0
+    for e in doc["traceEvents"]:
+        if e["name"] != "queue" or e["ph"] not in "be":
+            continue
+        n_queue += 1
+        rid = e["id"].split("q")[0]
+        assert life[rid]["b"] <= e["ts"] <= life[rid]["e"]
+        if e["ph"] == "b":
+            assert e["id"] not in opened
+            opened[e["id"]] = e["ts"]
+        else:
+            assert opened.pop(e["id"]) <= e["ts"]
+    assert not opened and n_queue > 0
+
+
+def test_duration_spans_serialize_per_track(traced):
+    """X spans live only on the serially-timed worker tracks and never
+    overlap within a track (validate_trace also enforces this — here we
+    additionally pin WHERE they are allowed)."""
+    _, _, doc = traced
+    by_track = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] != "X":
+            continue
+        assert e["pid"] == PID_FLEET and e["tid"] != TID_ROUTER
+        by_track.setdefault((e["pid"], e["tid"]), []).append(e)
+    assert by_track, "no duration spans on the worker tracks"
+    for evs in by_track.values():
+        evs.sort(key=lambda e: e["ts"])
+        for prev, cur in zip(evs, evs[1:]):
+            assert prev["ts"] + prev["dur"] <= cur["ts"] + 1e-6
+
+
+def test_instants_inside_run_window(traced):
+    # the adaptive sampler's final tick may land up to one window past
+    # the last completion (it keeps sampling while the heap is live)
+    rep, _, doc = traced
+    t_end = (rep.makespan_ns + 100_000.0) / 1e3 + 1e-6
+    kinds = set()
+    for e in doc["traceEvents"]:
+        if e["ph"] != "i":
+            continue
+        assert 0.0 <= e["ts"] <= t_end
+        assert e["pid"] in (PID_FLEET, PID_RESOURCES, PID_REQUESTS)
+        kinds.add(e["name"])
+    assert "window" in kinds            # the adaptive sampler left marks
+    assert "replan" in kinds            # ... and the burst forced a move
+
+
+def test_export_bit_identical_across_runs(traced):
+    _, _, doc = traced
+    _, obs2 = _traced_run()
+    assert json.dumps(doc, sort_keys=True) \
+        == json.dumps(obs2.recorder.to_chrome(), sort_keys=True)
+
+
+def test_trace_matches_committed_golden(traced, request):
+    _, _, doc = traced
+    text = json.dumps(doc, indent=1, sort_keys=True) + "\n"
+    if request.config.getoption("--regen-goldens"):
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(text)
+        return
+    assert GOLDEN_PATH.exists(), \
+        f"{GOLDEN_PATH} missing — run with --regen-goldens"
+    assert GOLDEN_PATH.read_text() == text, \
+        "flight-recorder export drifted from tests/golden/obs_trace.json" \
+        " (regenerate with --regen-goldens if intentional)"
+
+
+def test_phased_trace_exports_valid_and_deterministic():
+    """The OTHER canonical workload (poisson→burst→idle→burst, the
+    adaptive bench's trace): full adaptive fleet, still a clean and
+    bit-stable export."""
+    from repro.serve.fabric import canonical_phased_trace
+    trace, _ = canonical_phased_trace()
+
+    def run():
+        obs = enabled_obs()
+        adapt = Replanner(VECTOR, n_workers=8, n_slots=4)
+        rep = build_sim_fleet(8, VECTOR, adapt=adapt,
+                              adapt_window_ns=100_000.0,
+                              obs=obs).run(trace)
+        assert rep.n_completed == rep.n_arrivals
+        return json.dumps(obs.recorder.to_chrome(), sort_keys=True), obs
+
+    text1, obs = run()
+    assert validate_trace(obs.recorder.to_chrome()) == []
+    assert text1 == run()[0]
+
+
+def test_validator_flags_broken_traces():
+    rec = FlightRecorder()
+    rec.complete(PID_FLEET, 100, "a", 0.0, 2000.0)
+    rec.complete(PID_FLEET, 100, "b", 1000.0, 2000.0)   # overlaps a
+    rec.begin(PID_REQUESTS, "request", 1, 0.0)          # never closed
+    rec.end(PID_REQUESTS, "request", 2, 5.0)            # never opened
+    problems = "\n".join(validate_trace(rec.to_chrome()))
+    assert "overlap" in problems
+    assert "never closed" in problems
+    assert "without begin" in problems
+    assert validate_trace(FlightRecorder().to_chrome()) == []
+
+
+# ---------------------------------------------------------------------------
+# zero-overhead / bit-exactness contracts (satellite: registry-driven
+# Replanner == hand-threaded telemetry)
+# ---------------------------------------------------------------------------
+
+def _fingerprint(rep):
+    return (rep.makespan_ns, rep.total_new_tokens, rep.occupancy,
+            rep.lock_wait_ns, tuple(sorted(rep.latency_ns.items())),
+            tuple(rep.per_worker_tokens),
+            tuple((t, v.label) for t, v in rep.transitions))
+
+
+def test_observability_never_perturbs_the_schedule():
+    """Obs defaulted, explicitly no-op, and fully enabled: one virtual
+    schedule.  With ``adapt`` attached this is also the PR 5/6 claim
+    that the registry-driven Replanner reproduces the hand-threaded
+    telemetry bit-exactly — same windows, same transitions."""
+    trace = canonical_bursty_trace()[:24]
+
+    def run(obs):
+        adapt = Replanner(VECTOR, n_workers=4, n_slots=4)
+        return build_sim_fleet(4, VECTOR, adapt=adapt,
+                               adapt_window_ns=100_000.0,
+                               obs=obs).run(trace)
+
+    rep_off, rep_noop, rep_on = run(None), run(NOOP_OBS), \
+        run(enabled_obs())
+    assert _fingerprint(rep_off) == _fingerprint(rep_noop) \
+        == _fingerprint(rep_on)
+    assert rep_on.transitions, "burst never forced a migration"
+    assert rep_off.n_windows == rep_on.n_windows
+
+
+def test_report_metrics_registry_view():
+    """FleetReport is now a view over the run's registry: the aggregate
+    fields and the registry's totals are the same numbers."""
+    rep, obs = _traced_run(adaptive=False)
+    m = rep.metrics
+    assert m is obs.metrics
+    assert rep.lock_wait_ns == m.value("fleet.lock_wait_ns",
+                                       axis="channels")
+    assert sum(rep.per_worker_tokens) == m.total("request.tokens")
+    assert m.total("fleet.completed") == rep.n_completed
+    lat = m.merged_histogram("request.latency_ms")
+    assert lat.n == rep.n_completed
+    true_p99 = quantile(rep.latency_ns.values(), 0.99) / 1e6
+    assert abs(lat.quantile(0.99) - true_p99) <= 0.01 * true_p99 + 1e-9
+
+
+def test_private_registry_when_obs_disabled():
+    """The router always runs its windows through a registry — a private
+    one when obs is off — and never leaks series into the shared no-op
+    singleton."""
+    rep = build_sim_fleet(2, VECTOR).run(canonical_bursty_trace()[:8])
+    assert rep.metrics is not None and rep.metrics.enabled
+    assert rep.metrics.total("worker.slot_steps") > 0
+    assert NOOP_REGISTRY.names() == []

@@ -1,0 +1,167 @@
+"""Chaos fabric: recovery latency, kill-1-of-4 throughput floor, and
+overload shedding under 4x pressure (DESIGN.md §15).
+
+All rows run the virtual-time sim fleet — deterministic pure arithmetic,
+so every metric (including the throughput ratios) gates tightly in
+``check_regression.py``.
+
+Rows:
+
+* ``faults_crash_recovery`` — the canonical w0 crash on the canonical
+  bursty trace: outage-to-detection latency, retries, recovered counts.
+* ``faults_kill1of4`` — the headline robustness claim: killing 1 of 4
+  workers mid-run keeps >= 0.70x the healthy fleet's throughput with
+  ZERO tokens lost or duplicated (the ``acceptance`` flag).
+* ``faults_chaos`` — all four fault kinds on one paged run (the golden
+  chaos scenario): request conservation under compound failures.
+* ``faults_overload_4x`` — the canonical trace time-compressed 4x with
+  a finite shed capacity: shed fraction by priority tier, and the
+  never-accepted-then-dropped invariant (accepted == completed).
+
+  PYTHONPATH=src:. python -m benchmarks.bench_faults
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import row, write_bench_json
+from repro.core.plan import SharingVector
+from repro.serve.fabric import (build_sim_fleet, canonical_bursty_trace,
+                                canonical_chaos_plan,
+                                canonical_crash_plan,
+                                canonical_faulted_trace)
+from repro.serve.recovery import RecoveryPolicy
+
+VEC = SharingVector.diagonal(2)
+N_WORKERS = 4
+
+
+def _run(faults=None, recovery=None, trace=None, **kw):
+    router = build_sim_fleet(N_WORKERS, VEC, faults=faults,
+                             recovery=recovery, **kw)
+    return router.run(canonical_bursty_trace() if trace is None
+                      else trace)
+
+
+def _tokens(rep):
+    return {c.rid: c.new_tokens for c in rep.completions}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    rows = []
+    healthy = _run()
+
+    # --- canonical crash: detection + recovery latency ------------------
+    rep = _run(faults=canonical_crash_plan())
+    lat_ms = max(rep.recovery_latency_ns) / 1e6 \
+        if rep.recovery_latency_ns else 0.0
+    rows.append({"config": {"scenario": "crash_recovery",
+                            "faults": canonical_crash_plan().describe(),
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": rep.tok_per_s,
+                     "tokens": rep.total_new_tokens,
+                     "completed": rep.n_completed,
+                     "detections": rep.detections,
+                     "retries": rep.retries,
+                     "recovered": len(rep.recovered),
+                     "failed": len(rep.failed),
+                     "duplicates": rep.duplicate_completions,
+                     "recovery_latency_ms": lat_ms}})
+    row("faults_crash_recovery", lat_ms * 1e3,
+        f"detect={lat_ms:.2f}ms|retries={rep.retries}"
+        f"|recovered={len(rep.recovered)}|failed={len(rep.failed)}")
+
+    # --- kill 1 of 4: throughput floor + zero token loss ----------------
+    vs_healthy = rep.tok_per_s / healthy.tok_per_s
+    conserved = _tokens(rep) == _tokens(healthy) \
+        and rep.duplicate_completions == 0
+    ok = vs_healthy >= 0.70 and conserved
+    rows.append({"config": {"scenario": "kill1of4",
+                            "faults": canonical_crash_plan().describe(),
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": rep.tok_per_s,
+                     "vs_healthy": vs_healthy,
+                     "tokens": rep.total_new_tokens,
+                     "completed": rep.n_completed,
+                     "duplicates": rep.duplicate_completions,
+                     "acceptance": ok}})
+    row("faults_kill1of4", 1e3 / max(rep.tok_per_s, 1e-9) * 1e6,
+        f"vs_healthy={vs_healthy:.3f}x|conserved={conserved}"
+        f"|acceptance={'PASS' if ok else 'FAIL'}")
+    assert ok, (vs_healthy, conserved)
+
+    # --- compound chaos (the golden scenario), paged --------------------
+    trace = canonical_faulted_trace()
+    chaos = _run(faults=canonical_chaos_plan(), trace=trace,
+                 page_size=16)
+    base = _run(trace=trace, page_size=16)
+    chaos_ok = _tokens(chaos) == _tokens(base) \
+        and chaos.duplicate_completions == 0 and not chaos.failed
+    rows.append({"config": {"scenario": "chaos",
+                            "faults": canonical_chaos_plan().describe(),
+                            "workers": N_WORKERS, "page_size": 16},
+                 "metrics": {
+                     "tok_per_s": chaos.tok_per_s,
+                     "tokens": chaos.total_new_tokens,
+                     "completed": chaos.n_completed,
+                     "detections": chaos.detections,
+                     "retries": chaos.retries,
+                     "recovered": len(chaos.recovered),
+                     "failed": len(chaos.failed),
+                     "duplicates": chaos.duplicate_completions,
+                     "acceptance": chaos_ok}})
+    row("faults_chaos", 1e3 / max(chaos.tok_per_s, 1e-9) * 1e6,
+        f"faults={chaos.faults_injected}|detect={chaos.detections}"
+        f"|recovered={len(chaos.recovered)}"
+        f"|acceptance={'PASS' if chaos_ok else 'FAIL'}")
+    assert chaos_ok
+
+    # --- 4x overload: shed fraction, lowest tier first ------------------
+    squeezed = [dataclasses.replace(a, t_ns=a.t_ns / 4.0,
+                                    deadline_ns=-1.0)
+                for a in canonical_faulted_trace()]
+    pol = RecoveryPolicy(shed_capacity=12)
+    rep = _run(recovery=pol, trace=squeezed)
+    n = len(squeezed)
+    shed_frac = rep.n_shed / n
+    pri = {a.rid: a.priority for a in squeezed}
+    shed_rids = {rid for rid, _, _ in rep.shed}
+    tier_frac = {}
+    for p in (0, 1, 2):
+        tier = [a.rid for a in squeezed if pri[a.rid] == p]
+        tier_frac[p] = len([r for r in tier if r in shed_rids]) \
+            / max(1, len(tier))
+    # never accepted-then-dropped: every accepted arrival completed
+    invariant = rep.n_arrivals == rep.n_completed \
+        and not (shed_rids & {c.rid for c in rep.completions})
+    shed_ok = invariant and 0.0 < shed_frac < 1.0 \
+        and tier_frac[0] >= tier_frac[2]
+    rows.append({"config": {"scenario": "overload_4x",
+                            "shed_capacity": pol.shed_capacity,
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": rep.tok_per_s,
+                     "completed": rep.n_completed,
+                     "shed_frac": shed_frac,
+                     "shed_frac_p0": tier_frac[0],
+                     "shed_frac_p2": tier_frac[2],
+                     "acceptance": shed_ok}})
+    row("faults_overload_4x", 1e3 / max(rep.tok_per_s, 1e-9) * 1e6,
+        f"shed={shed_frac:.2f}|p0={tier_frac[0]:.2f}"
+        f"|p2={tier_frac[2]:.2f}"
+        f"|acceptance={'PASS' if shed_ok else 'FAIL'}")
+    assert shed_ok, (shed_frac, tier_frac, invariant)
+
+    write_bench_json("faults", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

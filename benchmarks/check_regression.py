@@ -48,7 +48,7 @@ BASELINE_DIR = os.path.join(HERE, "baselines")
 #: qualifies: its gated quantities (virtual throughput, trace/series
 #: volumes, the 0.0 overhead fractions) are all schedule-determined —
 #: only its ungated wall_*_ms fields touch the host clock.
-VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs"}
+VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs", "faults"}
 
 #: metric -> (direction, kind).  direction: which way is WORSE ("either"
 #: gates both ways).  kind "perf" gates per the bench's time domain;
@@ -79,6 +79,19 @@ GATES: Dict[str, Tuple[str, str]] = {
     "overhead_enabled_frac": ("higher", "struct"),
     "trace_events": ("either", "struct"),
     "metric_series": ("either", "struct"),
+    # chaos fabric (bench_faults): deterministic fault/recovery ledgers
+    # — any drift in detection, retry, or shed behaviour is a real
+    # semantic change — plus the kill-1-of-4 throughput floor
+    "vs_healthy": ("lower", "exact"),
+    "detections": ("either", "struct"),
+    "retries": ("either", "struct"),
+    "recovered": ("either", "struct"),
+    "failed": ("higher", "struct"),
+    "duplicates": ("higher", "struct"),
+    "recovery_latency_ms": ("higher", "perf"),
+    "shed_frac": ("either", "struct"),
+    "shed_frac_p0": ("either", "struct"),
+    "shed_frac_p2": ("either", "struct"),
     "trace_valid": ("flag", "flag"),
     "identical_reports": ("flag", "flag"),
     "acceptance": ("flag", "flag"),

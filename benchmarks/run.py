@@ -21,6 +21,7 @@ BENCHES = [
     "bench_adaptive",
     "bench_paged",
     "bench_obs",
+    "bench_faults",
     "roofline",
 ]
 

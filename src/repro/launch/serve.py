@@ -36,6 +36,7 @@ from repro.serve import connect
 from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, phased_trace, \
     poisson_trace, session_trace
 from repro.serve.fabric.placement import POLICIES
+from repro.serve.recovery import RecoveryPolicy
 
 
 def make_trace(args):
@@ -235,6 +236,14 @@ def run_fleet(cfg, client, args) -> None:
     if rep.page_hwm_frac is not None:
         print(f"  pages: peak {rep.page_hwm_frac * 100:.1f}% of the "
               f"dedicated reservation, {rep.page_deferrals} deferrals")
+    if rep.faults_injected or rep.detections or rep.retries or rep.shed:
+        worst = (max(rep.recovery_latency_ns) / 1e6
+                 if rep.recovery_latency_ns else 0.0)
+        print(f"  chaos: {rep.faults_injected} faults, "
+              f"{rep.detections} detections (worst {worst:.2f}ms), "
+              f"{rep.retries} retries, {len(rep.recovered)} recovered, "
+              f"{len(rep.failed)} failed, {rep.n_shed} shed, "
+              f"{rep.duplicate_completions} duplicate completions")
     if client.plan.adaptive:
         path = " -> ".join(
             f"{vec.label}@{t / 1e6:.2f}ms"
@@ -367,6 +376,24 @@ def main(argv=None):
                     help="adaptation window in virtual microseconds "
                          "(fleet mode; the single engine converts it to "
                          "decode steps via the fabric cost model)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="chaos fabric (DESIGN.md §15): deterministic "
+                         "fault plan, comma-separated "
+                         "'kind@time:target[:duration[:frac]]' — kinds "
+                         "crash/stall/chan_stall/page_pressure, e.g. "
+                         "'crash@4.5ms:w0,stall@2.2ms:w1:1ms' (fleet "
+                         "mode only)")
+    ap.add_argument("--heartbeat-us", type=float, default=None,
+                    help="failure-detector probe cadence in virtual us "
+                         "(default 100)")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    help="heartbeat silence that declares a worker dead, "
+                         "virtual us (default 400; must exceed the "
+                         "largest healthy step)")
+    ap.add_argument("--shed-capacity", type=int, default=None,
+                    help="max outstanding requests before the router "
+                         "sheds new arrivals, lowest priority first "
+                         "(default 0 = unlimited)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace-event JSON of "
                          "the run (open at https://ui.perfetto.dev; "
@@ -398,10 +425,26 @@ def main(argv=None):
         # path instead truncates at the cache budget (a supported mode)
         ap.error(f"longest prompt ({pmax}) + max-new ({args.max_new}) "
                  f"must fit max-len ({args.max_len}) in fleet mode")
+    ft_knobs = (args.heartbeat_us, args.deadline_us, args.shed_capacity)
+    if (args.faults or any(k is not None for k in ft_knobs)) \
+            and args.workers <= 1:
+        ap.error("--faults and the recovery knobs need a fleet "
+                 "(--workers > 1)")
+    recovery = None
+    if args.faults or any(k is not None for k in ft_knobs):
+        kw = {}
+        if args.heartbeat_us is not None:
+            kw["heartbeat_ns"] = args.heartbeat_us * 1e3
+        if args.deadline_us is not None:
+            kw["deadline_ns"] = args.deadline_us * 1e3
+        if args.shed_capacity is not None:
+            kw["shed_capacity"] = args.shed_capacity
+        recovery = RecoveryPolicy(**kw)
     plan = build_plan(args, ap)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     obs = enabled_obs() if (args.trace_out or args.metrics_out) else None
-    client = connect(cfg, plan, seed=args.seed, obs=obs)
+    client = connect(cfg, plan, seed=args.seed, obs=obs,
+                     faults=args.faults, recovery=recovery)
     if plan.n_workers > 1:
         run_fleet(cfg, client, args)
     else:

@@ -97,8 +97,13 @@ class Supervisor:
 
     ``run(n_steps)`` executes ``step_fn(step) -> metrics``; on
     TransientWorkerFailure it calls ``restore_fn() -> resume_step`` and
-    continues, up to ``max_restarts``.  Anything else propagates (a real
-    bug should kill the job, not loop)."""
+    continues.  The ``max_restarts`` budget bounds CONSECUTIVE failures
+    — a completed step resets it — so a long job that weathers occasional
+    preemptions is not killed by a lifetime cap, while a crash loop (no
+    forward progress between failures) still gives up promptly.
+    ``restarts`` keeps counting every restart for telemetry.  Anything
+    other than TransientWorkerFailure propagates (a real bug should kill
+    the job, not loop)."""
 
     def __init__(self, step_fn: Callable, restore_fn: Callable,
                  max_restarts: int = 3,
@@ -109,7 +114,8 @@ class Supervisor:
         self.max_restarts = max_restarts
         self.straggler = straggler
         self.heartbeat = heartbeat
-        self.restarts = 0
+        self.restarts = 0              # lifetime total (telemetry)
+        self.consecutive_failures = 0  # the actual give-up budget
 
     def run(self, start_step: int, n_steps: int) -> dict:
         step = start_step
@@ -119,6 +125,7 @@ class Supervisor:
                 t0 = time.time()
                 metrics = self.step_fn(step) or {}
                 dt = time.time() - t0
+                self.consecutive_failures = 0
                 if self.straggler is not None:
                     self.straggler.observe(step, dt)
                 if self.heartbeat is not None:
@@ -126,7 +133,8 @@ class Supervisor:
                 step += 1
             except TransientWorkerFailure:
                 self.restarts += 1
-                if self.restarts > self.max_restarts:
+                self.consecutive_failures += 1
+                if self.consecutive_failures > self.max_restarts:
                     raise
                 step = self.restore_fn()
         return metrics

@@ -10,10 +10,14 @@ from repro.core.plan import (EndpointPlan, Hints, PRESETS, SharingVector,
                              as_plan, resolve)
 from repro.serve.api import ServeClient, Stream, connect
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.fabric.faults import FaultPlan, FaultSpec, parse_faults
+from repro.serve.recovery import LostWork, RecoveryManager, RecoveryPolicy
 from repro.serve.slots import SlotPool
 
 __all__ = [
-    "ContinuousEngine", "EndpointPlan", "Hints", "PRESETS", "Replanner",
-    "Request", "ServeClient", "ServeEngine", "SharingVector", "SlotPool",
-    "Stream", "WindowStats", "as_plan", "connect", "resolve",
+    "ContinuousEngine", "EndpointPlan", "FaultPlan", "FaultSpec", "Hints",
+    "LostWork", "PRESETS", "RecoveryManager", "RecoveryPolicy",
+    "Replanner", "Request", "ServeClient", "ServeEngine", "SharingVector",
+    "SlotPool", "Stream", "WindowStats", "as_plan", "connect",
+    "parse_faults", "resolve",
 ]

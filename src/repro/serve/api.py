@@ -52,10 +52,12 @@ from repro.models.model import Model
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import (NOOP_OBS, Observability, PID_REQUESTS)
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.fabric.faults import FaultPlan
 from repro.serve.fabric.placement import POLICIES
 from repro.serve.fabric.router import (Completion, EngineWorker,
                                        FabricCosts, FleetReport, Router)
 from repro.serve.fabric.traffic import Arrival
+from repro.serve.recovery import RecoveryPolicy
 
 #: Plan fields a live ``replan`` may NOT change: they size caches,
 #: compiled shapes, or the worker fleet itself — migrating them would
@@ -121,7 +123,9 @@ class ServeClient:
     """
 
     def __init__(self, cfg, params, plan: EndpointPlan,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 faults: Union[FaultPlan, str, None] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         if plan.placement not in POLICIES:
             raise ValueError(f"unknown placement {plan.placement!r}; "
                              f"one of {sorted(POLICIES)}")
@@ -133,7 +137,28 @@ class ServeClient:
         #: every run's spans + metrics for --trace-out / --metrics-out
         self.obs = obs if obs is not None else NOOP_OBS
         self.executor = plan.resolved_executor
+        if (faults is not None or recovery is not None) \
+                and self.executor != "fleet":
+            raise ValueError(
+                "fault injection / crash recovery live on the fleet "
+                "fabric (plan.n_workers > 1); this plan resolved to the "
+                f"{self.executor!r} executor")
+        #: chaos fabric (DESIGN.md §15): a FaultPlan (or its string
+        #: grammar) injected into every run's router; ``recovery`` tunes
+        #: detection/backoff/shedding.  Both None = today's fault-free
+        #: event stream, bit-identical.
+        self.faults = faults
+        self.recovery = recovery
         self.results: Dict[int, List[int]] = {}
+        #: exactly-once delivery cursor: tokens of ``results[rid]``
+        #: already surfaced to the caller.  Completion replays (a retry
+        #: racing its original, a duplicate splice) append only the
+        #: tokens past the cursor — never double-deliver, never reorder.
+        self._cursor: Dict[int, int] = {}
+        #: replays that DISAGREED with already-delivered tokens
+        #: (first-wins; structurally impossible under fail-stop, counted
+        #: defensively)
+        self.dedup_conflicts = 0
         self.report: Optional[FleetReport] = None   # last fleet report
         #: live migrations applied so far: (schedule key, vector) —
         #: virtual ns in fleet mode, engine step count in single-engine
@@ -226,9 +251,45 @@ class ServeClient:
         else:
             out = self._run_continuous(batch)
         missing = {p.rid for p in batch} - out.keys()
+        if missing and self.report is not None:
+            # shed / retry-exhausted requests are ACCOUNTED losses (the
+            # report names them); stream successors behind a dropped
+            # head return to the pending queue for the next run()
+            dropped = ({rid for rid, _, _ in self.report.shed}
+                       | set(self.report.failed)
+                       | {p.rid for p in self._pending})
+            missing -= dropped
         assert not missing, f"requests lost by the executor: {missing}"
         self.results.update(out)
         return out
+
+    def _ingest(self, rid: int, tokens) -> List[int]:
+        """Fold a completion's token list into ``results[rid]`` through
+        the exactly-once cursor: the overlap with what was already
+        delivered must agree (first delivery wins; a disagreement bumps
+        ``dedup_conflicts`` and is dropped), and only the suffix past
+        the cursor is appended.  Idempotent under replays."""
+        tokens = [int(x) for x in tokens]
+        got = self.results.setdefault(rid, [])
+        cur = self._cursor.get(rid, len(got))
+        overlap = min(cur, len(tokens))
+        if tokens[:overlap] != got[:overlap]:
+            self.dedup_conflicts += 1
+            return got
+        got.extend(tokens[cur:])
+        self._cursor[rid] = len(got)
+        return got
+
+    # ----- fault-tolerance views (populated by fleet runs) ----------------
+    @property
+    def shed(self) -> List:
+        """Requests refused before acceptance: (rid, reason, t_ns)."""
+        return list(self.report.shed) if self.report is not None else []
+
+    @property
+    def failed(self) -> List[int]:
+        """Requests that exhausted their retry budget."""
+        return list(self.report.failed) if self.report is not None else []
 
     def _request(self, p: _Pending) -> Request:
         return Request(rid=p.rid, prompt=p.prompt,
@@ -383,6 +444,9 @@ class ServeClient:
         trace.sort(key=lambda a: (a.t_ns, a.rid))
 
         def on_complete(c: Completion):
+            # stream tokens through the exactly-once cursor as they
+            # complete (the final loop below replays idempotently)
+            self._ingest(c.rid, c.output)
             sid = self._requests[c.rid].sid
             if sid is None or not waiting.get(sid):
                 return ()
@@ -394,7 +458,8 @@ class ServeClient:
                         placement=self.plan.placement,
                         on_complete=on_complete, adapt=adapt,
                         adapt_window_ns=self.plan.adapt_window_ns,
-                        obs=self.obs)
+                        obs=self.obs, faults=self.faults,
+                        recovery=self.recovery)
         self.report = router.run(trace)
         if adapt is not None:
             self.transitions.extend(self.report.transitions)
@@ -403,7 +468,12 @@ class ServeClient:
                 # (and its dispatch plan) starts where this one ended
                 self.plan = dataclasses.replace(self.plan, preset=None,
                                                 vector=router.vector)
-        return {c.rid: list(c.output)
+        # a shed/failed stream head never releases its successors: they
+        # go back on the pending queue so a later run() can retry them
+        # (fault-free, the waiting queues always drain — this is inert)
+        for q in waiting.values():
+            self._pending.extend(q)
+        return {c.rid: list(self._ingest(c.rid, c.output))
                 for c in self.report.completions}
 
     # ----- live re-planning -----------------------------------------------
@@ -523,6 +593,8 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
                              None] = None, *,
             params=None, seed: int = 0,
             obs: Optional[Observability] = None,
+            faults: Union[FaultPlan, str, None] = None,
+            recovery: Optional[RecoveryPolicy] = None,
             **overrides) -> ServeClient:
     """Connect a serving session: resolve ``plan`` (an ``EndpointPlan``,
     ``Hints``, ``SharingVector``, ``Category``/preset name, or None for
@@ -530,11 +602,16 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
     ``ServeClient`` over the executor the plan selects.  ``params``
     defaults to freshly initialized weights (``seed``).  ``obs`` (an
     ``obs.Observability``, e.g. ``obs.enabled_obs()``) turns on the
-    flight recorder + metrics registry for every run."""
+    flight recorder + metrics registry for every run.  ``faults`` (a
+    ``FaultPlan`` or its ``"crash@4.5ms:w0,stall@2ms:w1:1ms"`` grammar)
+    injects deterministic failures into every fleet run; ``recovery``
+    (a ``serve.RecoveryPolicy``) tunes detection, retry backoff, and
+    overload shedding — both need the fleet executor."""
     resolved = as_plan(plan, **overrides)
     if params is None:
         params = Model(cfg).init(jax.random.PRNGKey(seed))
-    return ServeClient(cfg, params, resolved, obs=obs)
+    return ServeClient(cfg, params, resolved, obs=obs, faults=faults,
+                       recovery=recovery)
 
 
 # connect(..., adaptive=True) is the one-flag spelling of live

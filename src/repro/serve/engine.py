@@ -816,6 +816,42 @@ class ContinuousEngine:
             self._cache["pt"] = self._cache["pt"].at[slot].set(
                 jnp.asarray(self._pt[slot]))
 
+    def evacuate(self) -> Tuple[List[Request], List[Request]]:
+        """Fail-stop teardown (the chaos fabric, DESIGN.md §15): pop
+        every resident request — live decode slots and the still-queued
+        backlog — WITHOUT retiring them: no ``done``/``latency`` entry,
+        because the work did not finish here.  Pages go back to the
+        pool and page-table rows are sentineled (conservation: a dead
+        worker leaks nothing), fused-mode device rows are marked
+        drained, and the engine stays steppable — the recovery layer
+        re-admits the evacuees on surviving workers.
+
+        -> ``(live, queued)``: live requests carry their emitted prefix
+        in ``output``; queued ones never started (``emitted == 0``)."""
+        live: List[Request] = []
+        evac_slots: List[int] = []
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            live.append(req)
+            evac_slots.append(slot)
+            self._slot_req[slot] = None
+            self._remaining[slot] = 0
+            if self.page_pool is not None:
+                self.page_pool.free(slot)
+                self._pt[slot] = sentinel(self.page_pool.total_pages)
+                self._cache["pt"] = self._cache["pt"].at[slot].set(
+                    jnp.asarray(self._pt[slot]))
+        if evac_slots and self.decode_horizon > 1:
+            idx = jnp.asarray(np.asarray(evac_slots, np.int32))
+            self._dev_state["finished"] = \
+                self._dev_state["finished"].at[idx].set(True)
+            self._dev_state["remaining"] = \
+                self._dev_state["remaining"].at[idx].set(0)
+        queued = list(self.queue)
+        self.queue.clear()
+        return live, queued
+
     # ----- external stepping ---------------------------------------------
     # The serving fabric (serve/fabric/) drives workers in virtual time, so
     # the engine's lifecycle is exposed as start / admit_waiting / step and

@@ -4,6 +4,9 @@ queue sharing structure is keyed by the ``channels`` axis of a
 categories — still accepted) (DESIGN.md §9, §11)."""
 
 from repro.serve.fabric.channels import DispatchChannel
+from repro.serve.fabric.faults import (FaultInjector, FaultPlan,
+                                       FaultSpec, canonical_chaos_plan,
+                                       canonical_crash_plan, parse_faults)
 from repro.serve.fabric.placement import POLICIES, make_policy
 from repro.serve.fabric.router import (Completion, EngineWorker,
                                        FabricCosts, FleetReport, Router,
@@ -11,14 +14,18 @@ from repro.serve.fabric.router import (Completion, EngineWorker,
 from repro.serve.fabric.traffic import (Arrival, Phase, TRAFFIC_SHAPES,
                                         bursty_trace,
                                         canonical_bursty_trace,
+                                        canonical_faulted_trace,
                                         canonical_phased_trace,
                                         phased_trace, poisson_trace,
                                         session_trace)
 
 __all__ = [
     "Arrival", "Completion", "DispatchChannel", "EngineWorker",
-    "FabricCosts", "FleetReport", "POLICIES", "Phase", "Router",
-    "SimWorker", "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
-    "canonical_bursty_trace", "canonical_phased_trace", "make_policy",
+    "FabricCosts", "FaultInjector", "FaultPlan", "FaultSpec",
+    "FleetReport", "POLICIES", "Phase", "Router", "SimWorker",
+    "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
+    "canonical_bursty_trace", "canonical_chaos_plan",
+    "canonical_crash_plan", "canonical_faulted_trace",
+    "canonical_phased_trace", "make_policy", "parse_faults",
     "phased_trace", "poisson_trace", "session_trace",
 ]

@@ -67,6 +67,14 @@ class DispatchChannel:
                               args={"wait_ns": wait, "queue": self.cid})
         return end
 
+    def hold(self, t_ns: float, hold_ns: float) -> float:
+        """Occupy the channel lock for ``hold_ns`` without touching the
+        queue — the chaos fabric's ``chan_stall`` fault: every push/pop
+        sharing this channel serializes behind the hold, so the
+        contention window shows up in lock-wait telemetry exactly like
+        organic contention.  -> lock release time."""
+        return self._locked(t_ns, hold_ns)
+
     def push(self, t_ns: float, item, hold_ns: float) -> float:
         """Enqueue at ``t_ns``; -> virtual time the lock was released."""
         end = self._locked(t_ns, hold_ns)

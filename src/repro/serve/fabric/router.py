@@ -52,9 +52,13 @@ from repro.obs.trace import (NOOP_OBS, Observability, PID_FLEET,
                              TID_PAGES0, TID_ROUTER, TID_WORKER0)
 from repro.serve.engine import ContinuousEngine, Request
 from repro.serve.fabric.channels import DispatchChannel
+from repro.serve.fabric.faults import (FaultInjector, FaultPlan,
+                                       parse_faults)
 from repro.serve.fabric.placement import PlacementPolicy, make_policy
 from repro.serve.fabric.traffic import Arrival
 from repro.serve.pages import PagePool
+from repro.serve.recovery import (LostWork, RecoveryManager,
+                                  RecoveryPolicy)
 from repro.serve.slots import SlotPool
 
 
@@ -199,6 +203,26 @@ class SimWorker:
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
 
+    def kill(self) -> List[LostWork]:
+        """Fail-stop death (chaos fabric, DESIGN.md §15): every live
+        slot and page-deferred admission is lost at its current emitted
+        count, pages return to the pool (a dead worker leaks nothing),
+        and the worker is left empty — the Router fences it so nothing
+        new arrives."""
+        lost: List[LostWork] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            emitted = max(1, s.arrival.max_new_tokens) - s.remaining
+            lost.append(LostWork(rid=s.arrival.rid, emitted=emitted))
+            self._slots[i] = None
+            if self.page_pool is not None:
+                self.page_pool.free(i)
+        for a in self._waiting:
+            lost.append(LostWork(rid=a.rid, emitted=0))
+        self._waiting.clear()
+        return lost
+
     def step(self, t_ns: float):
         """-> (cost_ns, completions finishing at t_ns + cost_ns)."""
         if self._waiting:
@@ -212,6 +236,11 @@ class SimWorker:
         live = [i for i, s in enumerate(self._slots) if s is not None]
         if not live:
             if self._waiting:
+                if self.page_pool is not None \
+                        and self.page_pool.seized_pages:
+                    # transient external pressure (page_pressure fault):
+                    # the restore event re-wakes this worker
+                    return 0.0, []
                 # nothing live will ever free pages for these: the plan's
                 # budget cannot fit the request at all
                 raise ValueError(
@@ -306,6 +335,45 @@ class EngineWorker:
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
 
+    def admit_retry(self, arrival: Arrival, orig: Arrival,
+                    prefix: Optional[List[int]], t_ns: float) -> float:
+        """Re-admit a crash-lost request: the ORIGINAL prompt (rebuilt
+        from ``orig`` — ``arrival`` carries the inflated prompt_len for
+        cost accounting only) extended by the already-emitted ``prefix``
+        tokens, with the shrunken ``max_new_tokens`` budget.  Greedy
+        decoding is a pure function of the context, so the continuation
+        is bit-identical to what the dead worker would have produced."""
+        if self.request_fn is not None:
+            base = self.request_fn(orig)
+        else:
+            base = Request(rid=orig.rid, prompt=self.prompt_fn(orig),
+                           max_new_tokens=orig.max_new_tokens)
+        prompt = np.asarray(base.prompt, np.int32)
+        if prefix:
+            prompt = np.concatenate(
+                [prompt, np.asarray(prefix, np.int32)])
+        self.engine.submit(dataclasses.replace(
+            base, prompt=prompt,
+            max_new_tokens=arrival.max_new_tokens))
+        self.stats["admitted"] += 1
+        # cost covers the full re-prefill (prompt + prefix)
+        return (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+
+    def kill(self) -> List[LostWork]:
+        """Fail-stop death: evacuate the wrapped engine (pages freed,
+        nothing retired) and hand every resident request's emitted
+        prefix to the recovery layer."""
+        live, queued = self.engine.evacuate()
+        lost = [LostWork(rid=r.rid, emitted=len(r.output or []),
+                         tokens=list(r.output or []),
+                         eos_id=(-1 if r.eos_id is None else r.eos_id))
+                for r in live]
+        lost += [LostWork(rid=r.rid, emitted=0,
+                          eos_id=(-1 if r.eos_id is None else r.eos_id))
+                 for r in queued]
+        return lost
+
     def step(self, t_ns: float):
         self.engine.admit_waiting()
         if self.engine.n_active == 0:
@@ -369,6 +437,18 @@ class FleetReport:
     #: streaming ``request.latency_ms`` sketch) without new report fields
     metrics: Optional[MetricsRegistry] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # ----- chaos/recovery (DESIGN.md §15; all empty on fault-free runs)
+    faults_injected: int = 0
+    detections: int = 0                       # workers declared dead
+    retries: int = 0                          # re-placements scheduled
+    recovered: List[int] = dataclasses.field(default_factory=list)
+    failed: List[int] = dataclasses.field(default_factory=list)
+    #: arrivals shed BEFORE acceptance: (rid, reason, t_ns)
+    shed: List = dataclasses.field(default_factory=list)
+    #: outage→detection per declared death (ns)
+    recovery_latency_ns: List[float] = dataclasses.field(
+        default_factory=list)
+    duplicate_completions: int = 0            # must stay 0 (exactly-once)
 
     @property
     def n_completed(self) -> int:
@@ -388,6 +468,14 @@ class FleetReport:
         if not x.sum():
             return 1.0
         return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
+
+    @property
+    def n_shed(self) -> int:
+        return len(self.shed)
+
+    def recovery_latency_ms(self, q: float) -> float:
+        """Outage→detection latency percentile, milliseconds."""
+        return quantile([x / 1e6 for x in self.recovery_latency_ns], q)
 
 
 class Router:
@@ -409,7 +497,9 @@ class Router:
                  on_complete: Optional[Callable] = None,
                  adapt: Optional[Replanner] = None,
                  adapt_window_ns: float = 250_000.0,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 faults=None,
+                 recovery: Optional[RecoveryPolicy] = None):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
         # ----- observability (DESIGN.md §14) -----------------------------
@@ -494,6 +584,25 @@ class Router:
         self._arrivals: Dict[int, Arrival] = {}
         self.completions: List[Completion] = []
         self._events = 0
+        # ----- chaos / recovery (DESIGN.md §15) --------------------------
+        # Fault tolerance is STRICTLY opt-in: with neither a fault plan
+        # nor a recovery policy the Router runs today's exact event
+        # sequence (no probes, no extra event kinds, bit-identical
+        # goldens).  Arming either switches on heartbeat probing,
+        # placement fencing, shedding, and the retry machinery.
+        if isinstance(faults, str):
+            faults = parse_faults(faults)
+        self.injector: Optional[FaultInjector] = None
+        if isinstance(faults, FaultPlan) and len(faults):
+            self.injector = FaultInjector(
+                faults.validate(len(workers), self.plan.n_queues))
+        self._ft: Optional[RecoveryManager] = None
+        if self.injector is not None or recovery is not None:
+            self._ft = RecoveryManager(recovery or RecoveryPolicy(),
+                                       len(workers))
+        #: worker -> LostWork captured at death, pending detection
+        self._lost: Dict[int, List[LostWork]] = {}
+        self._completed_rids: set = set()      # exactly-once guard (FT)
 
     # ----- event plumbing -------------------------------------------------
     def _push(self, t: float, kind: str, data) -> None:
@@ -502,34 +611,86 @@ class Router:
 
     def _wake(self, w: int, t: float) -> None:
         """Schedule worker ``w`` unless it already has a pending wake —
-        idle workers hold zero events (no spinning on empty queues)."""
+        idle workers hold zero events (no spinning on empty queues).
+        Fenced (dead) workers are never scheduled."""
+        if self._ft is not None and self._ft.fenced(w):
+            return
         if not self._scheduled[w]:
             self._scheduled[w] = True
             self._push(t, "wake", w)
 
     # ----- handlers -------------------------------------------------------
+    def _qkey(self, rid: int) -> str:
+        """Queue-span key: (rid, channel epoch), plus the retry attempt
+        when the recovery layer has re-placed the request — each
+        re-placement opens a fresh span instead of colliding with the
+        one its admission (or death) closed."""
+        a = self._ft.attempts.get(rid, 0) if self._ft is not None else 0
+        base = f"{rid}q{self._chan_epoch}"
+        return base if a == 0 else f"{base}a{a}"
+
+    def _eligible_channels(self) -> Optional[List[int]]:
+        """FT placement fence: channels with at least one worker NOT
+        declared dead; among those, prefer channels with a
+        non-straggling live worker.  None = no filtering (fault-free
+        mode, or nothing detected yet)."""
+        ft = self._ft
+        if ft is None or (not any(d is not None for d in ft.detected)
+                          and not any(ft.straggling)):
+            return None
+        live = [q for q, c in enumerate(self.channels)
+                if any(not ft.is_detected(w) for w in c.workers)]
+        if not live:
+            return None               # everyone is dead: place anywhere
+        good = [q for q in live
+                if any(not ft.is_detected(w) and not ft.straggling[w]
+                       for w in self.channels[q].workers)]
+        return good or live
+
     def _place(self, t: float, arr: Arrival) -> None:
         """Put one arrival onto a channel via the placement policy and
-        wake that channel's workers — shared by fresh arrivals and the
-        re-placement of queued work after a channel-plan migration."""
+        wake that channel's workers — shared by fresh arrivals, the
+        re-placement of queued work after a channel-plan migration, and
+        crash-recovery retries."""
         depths = [len(c) for c in self.channels]
         loads = [sum(self.workers[w].n_active for w in c.workers)
                  for c in self.channels]
         qid = self.policy.choose(arr, depths, loads)
+        eligible = self._eligible_channels()
+        if eligible is not None and qid not in eligible:
+            # deterministic remap off fenced/straggling channels; works
+            # for ANY policy (round-robin never sees queue state)
+            qid = eligible[qid % len(eligible)]
         released = self.channels[qid].push(t, arr, self.costs.t_enqueue_ns)
         if self._rec.enabled:
             # the queue-wait span is keyed by (rid, channel epoch) so a
             # migration's drain + re-place opens a fresh span instead of
             # colliding with the one the drain closed
-            self._rec.begin(PID_REQUESTS, "queue",
-                            f"{arr.rid}q{self._chan_epoch}", t,
-                            cat="queue", args={"queue": qid})
+            self._rec.begin(PID_REQUESTS, "queue", self._qkey(arr.rid),
+                            t, cat="queue", args={"queue": qid})
         for w in self.channels[qid].workers:
             self._wake(w, max(released, self._clock[w]))
 
     def _on_arrival(self, t: float, arr: Arrival) -> None:
         if arr.rid in self._arrivals:
             raise ValueError(f"duplicate rid {arr.rid}")
+        if self._ft is not None:
+            # overload shedding happens BEFORE acceptance: a shed
+            # arrival is never registered, admitted, or partially
+            # served — the never-accepted-then-dropped invariant
+            outstanding = (len(self._arrivals) - len(self.completions)
+                           - len(self._ft.failed))
+            reason = self._ft.shed_reason(arr, t, outstanding)
+            if reason is not None:
+                self._ft.record_shed(arr.rid, reason, t)
+                self.metrics.counter("fleet.shed", reason=reason).inc()
+                if self._rec.enabled:
+                    self._rec.instant(PID_FLEET, TID_ROUTER, "shed", t,
+                                      cat="fault",
+                                      args={"rid": arr.rid,
+                                            "reason": reason,
+                                            "priority": arr.priority})
+                return
         self._arrivals[arr.rid] = arr
         if self._rec.enabled:
             self._rec.begin(PID_REQUESTS, "request", arr.rid, t,
@@ -539,6 +700,20 @@ class Router:
 
     def _on_wake(self, t: float, w: int) -> None:
         self._scheduled[w] = False
+        ft = self._ft
+        if ft is not None:
+            if ft.fenced(w):
+                return                # dead: the wake is void
+            if t < ft.stall_until[w]:
+                # stalled: one deferred wake at the stall's end — no
+                # steps, no heartbeat (a long stall gets fenced)
+                self._wake(w, ft.stall_until[w])
+                return
+            # heartbeat + straggler telemetry: the wake-to-wake gap is
+            # the fleet's "step time" stream, fed to the SAME rolling-
+            # median mitigator the training stack uses
+            ft.observe_gap(w, t)
+            ft.beat(w, t)
         t = max(t, self._clock[w])
         worker = self.workers[w]
         chan = self.channels[self.plan.queue_of(w)]
@@ -555,14 +730,22 @@ class Router:
             if arr is None:       # a sibling drained it first
                 break
             if tracing:
-                rec.end(PID_REQUESTS, "queue",
-                        f"{arr.rid}q{self._chan_epoch}", t, cat="queue")
+                rec.end(PID_REQUESTS, "queue", self._qkey(arr.rid), t,
+                        cat="queue")
             t0 = t
-            t += worker.admit(arr, t)
+            if ft is not None and ft.attempts.get(arr.rid, 0) > 0 \
+                    and hasattr(worker, "admit_retry"):
+                # crash-recovery re-admission: prompt + emitted prefix
+                t += worker.admit_retry(arr, self._arrivals[arr.rid],
+                                        ft.prefix_of(arr.rid)[1], t)
+            else:
+                t += worker.admit(arr, t)
             if tracing:
                 rec.complete(PID_FLEET, TID_WORKER0 + w, "admit", t0,
                              t - t0, cat="admit", args={"rid": arr.rid})
         cost, done = worker.step(t)
+        if ft is not None and done:
+            done = self._splice_completions(done)
         if tracing:
             if pool is not None and pool.deferrals > defer0:
                 rec.instant(PID_RESOURCES, TID_PAGES0 + w,
@@ -597,6 +780,178 @@ class Router:
             self._wake(w, t_end)      # keep stepping while slots are live
         else:
             self._clock[w] = t        # idle: zero pending events
+
+    # ----- chaos: fault injection + crash recovery (DESIGN.md §15) --------
+    def _splice_completions(self, done: List[Completion]
+                            ) -> List[Completion]:
+        """FT post-processing of a step's completions: drop duplicates
+        (defensive — the fail-stop fencing should make them impossible),
+        splice a recovered request's pre-crash prefix back onto its
+        continuation, and mark recoveries."""
+        ft, out = self._ft, []
+        for c in done:
+            if c.rid in self._completed_rids:
+                ft.duplicates += 1
+                self.metrics.counter("fleet.duplicate_completions").inc()
+                continue
+            self._completed_rids.add(c.rid)
+            emitted, toks = ft.prefix_of(c.rid)
+            if emitted or toks:
+                output = c.output
+                if output is not None:
+                    output = list(toks or []) + list(output)
+                c = dataclasses.replace(
+                    c, new_tokens=c.new_tokens + emitted, output=output)
+            if ft.attempts.get(c.rid, 0) > 0:
+                ft.note_completed(c.rid)
+                self.metrics.counter("fleet.recovered").inc()
+                if self._rec.enabled:
+                    self._rec.instant(
+                        PID_FLEET, TID_ROUTER, "recover", c.t_done_ns,
+                        cat="fault",
+                        args={"rid": c.rid,
+                              "attempts": ft.attempts[c.rid]})
+            out.append(c)
+        return out
+
+    def _on_fault(self, t: float, spec) -> None:
+        """Apply one scheduled ``FaultSpec`` (the injector's event)."""
+        ft = self._ft
+        self.injector.fire(spec)
+        self.metrics.counter("fleet.faults", kind=spec.kind).inc()
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "fault", t,
+                              cat="fault",
+                              args={"kind": spec.kind,
+                                    "target": spec.target,
+                                    "duration_ns": spec.duration_ns})
+        if spec.kind == "crash":
+            self._kill_worker(t, spec.target)
+        elif spec.kind == "stall":
+            w = spec.target
+            if not ft.fenced(w):
+                ft.stall_until[w] = max(ft.stall_until[w],
+                                        t + spec.duration_ns)
+        elif spec.kind == "chan_stall":
+            self.channels[spec.target % len(self.channels)].hold(
+                t, spec.duration_ns)
+        elif spec.kind == "page_pressure":
+            pool = getattr(self.workers[spec.target], "page_pool", None)
+            if pool is not None:
+                seized = pool.seize(int(spec.frac * pool.free_pages))
+                if seized:
+                    self._push(t + spec.duration_ns, "restore",
+                               (spec.target, seized))
+
+    def _kill_worker(self, t: float, w: int) -> None:
+        """Fail-stop at a step boundary: fence the worker (wakes void,
+        no more heartbeats) and capture everything it was holding.  The
+        residue stays ours until DETECTION — the recovery layer may not
+        act on knowledge the failure detector does not have yet."""
+        ft = self._ft
+        if ft.fenced(w):
+            return
+        ft.mark_dead(w, t)
+        kill = getattr(self.workers[w], "kill", None)
+        lost = kill() if kill is not None else []
+        if lost:
+            self._lost.setdefault(w, []).extend(lost)
+
+    def _worker_holds_work(self, w: int) -> bool:
+        return (bool(self._lost.get(w))
+                or len(self.channels[self.plan.queue_of(w)]) > 0
+                or self.workers[w].n_active > 0)
+
+    def _on_probe(self, t: float) -> None:
+        """Heartbeat probe: refresh beats of genuinely idle workers
+        (idle + empty channel = vacuously healthy; an idle fleet must
+        not get fenced), declare overdue workers dead, and keep the
+        probe chain alive while the run — or any undetected residue —
+        is live."""
+        ft = self._ft
+        for w in range(len(self.workers)):
+            if ft.is_detected(w):
+                continue
+            if not ft.fenced(w) and not self._worker_holds_work(w):
+                ft.beat(w, t)
+                continue
+            if ft.overdue(w, t):
+                self._detect_dead(t, w)
+        if self._heap or self._needs_probe():
+            self._push(t + ft.policy.heartbeat_ns, "probe", None)
+
+    def _needs_probe(self) -> bool:
+        """True while some fenced-but-undetected worker still holds
+        work — the probe chain must outlive the last data event or
+        that residue would never be recovered."""
+        ft = self._ft
+        return any(ft.fenced(w) and not ft.is_detected(w)
+                   and self._worker_holds_work(w)
+                   for w in range(len(self.workers)))
+
+    def _detect_dead(self, t: float, w: int) -> None:
+        """Declare worker ``w`` dead and hand every piece of its work
+        to the retry machinery: residue captured at death, plus any
+        arrivals stranded on a channel with no unfenced member left."""
+        ft = self._ft
+        if not ft.fenced(w):
+            # a stall (or silent wedge) past the deadline is
+            # indistinguishable from a crash: fence it NOW — if the
+            # worker later "wakes", the fence voids it (fail-stop)
+            self._kill_worker(t, w)
+        lat = ft.mark_detected(w, t)
+        self.metrics.counter("fleet.detections").inc()
+        self.metrics.histogram("fleet.recovery_latency_ms").observe(
+            lat / 1e6)
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "detect", t,
+                              cat="fault",
+                              args={"worker": w, "latency_ns": lat})
+        chan = self.channels[self.plan.queue_of(w)]
+        if all(ft.fenced(x) for x in chan.workers):
+            for arr in chan.drain():
+                if self._rec.enabled:
+                    self._rec.end(PID_REQUESTS, "queue",
+                                  self._qkey(arr.rid), t, cat="queue")
+                self._lost.setdefault(w, []).append(
+                    LostWork(rid=arr.rid))
+        for lw in self._lost.pop(w, []):
+            ft.note_lost(lw)
+            self._schedule_retry(t, lw.rid)
+
+    def _schedule_retry(self, t: float, rid: int) -> None:
+        ft = self._ft
+        delay = ft.next_attempt(rid)
+        if delay is None:
+            self.metrics.counter("fleet.failed").inc()
+            if self._rec.enabled:
+                self._rec.instant(PID_FLEET, TID_ROUTER,
+                                  "retry_exhausted", t, cat="fault",
+                                  args={"rid": rid})
+                self._rec.end(PID_REQUESTS, "request", rid, t,
+                              args={"failed": True})
+            return
+        self.metrics.counter("fleet.retries").inc()
+        self._push(t + delay, "retry", rid)
+
+    def _on_retry(self, t: float, rid: int) -> None:
+        """Re-place a lost request: same rid, arrival time NOW, prompt
+        length inflated by the emitted prefix (re-prefill cost is
+        real), token budget shrunk by it (the prefix is not decoded
+        twice).  Latency still accrues from the ORIGINAL arrival."""
+        ft = self._ft
+        orig = self._arrivals[rid]
+        emitted, _ = ft.prefix_of(rid)
+        arr = dataclasses.replace(
+            orig, t_ns=t, prompt_len=orig.prompt_len + emitted,
+            max_new_tokens=max(1, orig.max_new_tokens - emitted))
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "retry", t,
+                              cat="fault",
+                              args={"rid": rid,
+                                    "attempt": ft.attempts.get(rid, 0),
+                                    "emitted": emitted})
+        self._place(t, arr)
 
     # ----- adaptation -----------------------------------------------------
     def _fleet_compiles(self) -> int:
@@ -777,8 +1132,7 @@ class Router:
             if self._rec.enabled:
                 for arr in pending:
                     self._rec.end(PID_REQUESTS, "queue",
-                                  f"{arr.rid}q{self._chan_epoch}", t,
-                                  cat="queue")
+                                  self._qkey(arr.rid), t, cat="queue")
             self._lock_wait_retired += sum(
                 c.stats["lock_wait_ns"] for c in self.channels)
             self.plan = DispatchPlan(new.channels, n)
@@ -838,6 +1192,11 @@ class Router:
             self._push(arr.t_ns, "arrival", arr)
         if self.adapt is not None and self._heap:
             self._push(self.adapt_window_ns, "replan", None)
+        if self.injector is not None:
+            for t, spec in self.injector.schedule():
+                self._push(t, "fault", spec)
+        if self._ft is not None and self._heap:
+            self._push(self._ft.policy.heartbeat_ns, "probe", None)
         while self._heap:
             t, _, kind, data = heapq.heappop(self._heap)
             self._events += 1
@@ -845,6 +1204,18 @@ class Router:
                 self._on_arrival(t, data)
             elif kind == "replan":
                 self._on_replan(t)
+            elif kind == "fault":
+                self._on_fault(t, data)
+            elif kind == "probe":
+                self._on_probe(t)
+            elif kind == "retry":
+                self._on_retry(t, data)
+            elif kind == "restore":
+                w, pages = data
+                pool = getattr(self.workers[w], "page_pool", None)
+                if pool is not None:
+                    pool.restore(pages)
+                self._wake(w, max(t, self._clock[w]))
             else:
                 self._on_wake(t, data)
 
@@ -895,6 +1266,20 @@ class Router:
             page_hwm_frac=page_frac,
             page_deferrals=sum(p.deferrals for p in pools),
             metrics=m,
+            faults_injected=(self.injector.n_fired
+                             if self.injector is not None else 0),
+            detections=(self._ft.detections
+                        if self._ft is not None else 0),
+            retries=self._ft.retries if self._ft is not None else 0,
+            recovered=(list(self._ft.recovered)
+                       if self._ft is not None else []),
+            failed=(list(self._ft.failed)
+                    if self._ft is not None else []),
+            shed=list(self._ft.shed) if self._ft is not None else [],
+            recovery_latency_ns=(list(self._ft.latency_ns)
+                                 if self._ft is not None else []),
+            duplicate_completions=(self._ft.duplicates
+                                   if self._ft is not None else 0),
         )
 
 
@@ -905,7 +1290,9 @@ def build_sim_fleet(n_workers: int, sharing, *,
                     adapt_window_ns: float = 250_000.0,
                     page_size: int = 0, max_len: int = 512,
                     page_budget: Optional[int] = None,
-                    obs: Optional[Observability] = None) -> Router:
+                    obs: Optional[Observability] = None,
+                    faults=None,
+                    recovery: Optional[RecoveryPolicy] = None) -> Router:
     """The bench/test entrypoint: N virtual workers behind a router.
 
     ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
@@ -934,4 +1321,5 @@ def build_sim_fleet(n_workers: int, sharing, *,
                          page_budget=page_budget)
                for w in range(n_workers)]
     return Router(workers, sharing, placement=placement, costs=costs,
-                  adapt=adapt, adapt_window_ns=adapt_window_ns, obs=obs)
+                  adapt=adapt, adapt_window_ns=adapt_window_ns, obs=obs,
+                  faults=faults, recovery=recovery)

@@ -29,13 +29,22 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
-    """One request entering the fabric at virtual time ``t_ns``."""
+    """One request entering the fabric at virtual time ``t_ns``.
+
+    ``deadline_ns``/``priority`` exist for the chaos/recovery layer
+    (DESIGN.md §15): a deadline in virtual time after which admitting
+    the request is pointless (the Router sheds it BEFORE accepting),
+    and a priority tier (higher = more important) that orders overload
+    shedding.  Both default to "no constraint" so every pre-existing
+    trace, golden, and bench row is byte-identical."""
 
     rid: int
     t_ns: float
     prompt_len: int
     max_new_tokens: int
     session: int = -1                 # -1 = sessionless
+    deadline_ns: float = -1.0         # -1 = no deadline
+    priority: int = 0                 # higher tiers shed last
 
     @property
     def cost_tokens(self) -> int:
@@ -191,6 +200,22 @@ def canonical_bursty_trace() -> List[Arrival]:
     while any sharing level keeps ≥ 0.9x dedicated throughput."""
     return bursty_trace(96, burst_size=24, burst_gap_ns=2_000_000.0,
                         new_tokens=(2, 24), seed=3)
+
+
+def canonical_faulted_trace() -> List[Arrival]:
+    """THE deterministic chaos-workload trace (fault tests + golden +
+    bench): the canonical bursty trace re-annotated with priority tiers
+    (``rid % 3`` — so every burst mixes all tiers) and a per-request
+    deadline two burst gaps after arrival on the LOWEST tier only.  The
+    token schedule of a fault-free run is identical to
+    ``canonical_bursty_trace`` because annotations only matter once the
+    Router's recovery layer is armed."""
+    out = []
+    for a in canonical_bursty_trace():
+        pri = a.rid % 3
+        ddl = a.t_ns + 4_000_000.0 if pri == 0 else -1.0
+        out.append(dataclasses.replace(a, priority=pri, deadline_ns=ddl))
+    return out
 
 
 TRAFFIC_SHAPES = {

@@ -76,6 +76,10 @@ class PagePool:
         heapq.heapify(self._free)
         #: slot -> its page ids, in allocation order
         self._owned: Dict[int, List[int]] = {}
+        #: pages withheld by an external pressure spike (chaos fabric) —
+        #: neither free nor owned by a slot; ``restore`` returns them
+        self._seized: List[int] = []
+        self._seized_ever = False     # keeps the series once it exists
         self.deferrals = 0            # admission attempts the pool refused
         self.hwm = 0                  # high-water mark of live pages
 
@@ -114,9 +118,11 @@ class PagePool:
         return len(self._free)
 
     def pressure(self) -> float:
-        """Live-page fraction of the pool — the pool-pressure telemetry
-        ``core.adapt.Replanner(paged=True)`` promotes/demotes on."""
-        return self.live_pages / self.total_pages
+        """Unavailable-page fraction of the pool (live + seized) — the
+        pool-pressure telemetry ``core.adapt.Replanner(paged=True)``
+        promotes/demotes on; a chaos-fabric pressure spike registers
+        here exactly like organic occupancy."""
+        return (self.live_pages + len(self._seized)) / self.total_pages
 
     # ----- the allocator --------------------------------------------------
     def alloc(self, slot: int, n: int) -> Optional[List[int]]:
@@ -154,6 +160,30 @@ class PagePool:
     def pages_of(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, []))
 
+    # ----- external pressure (the chaos fabric's page_pressure fault) -----
+    @property
+    def seized_pages(self) -> int:
+        return len(self._seized)
+
+    def seize(self, n: int) -> List[int]:
+        """Withhold up to ``n`` FREE pages from the pool (a co-tenant
+        spike): the lowest-numbered free pages leave the free list but
+        belong to no slot, so admissions defer against the shrunken
+        pool while every live mapping is untouched.  -> the seized page
+        ids (pass them back through :meth:`restore`)."""
+        n = max(0, min(int(n), len(self._free)))
+        taken = [heapq.heappop(self._free) for _ in range(n)]
+        self._seized.extend(taken)
+        if taken:
+            self._seized_ever = True
+        return taken
+
+    def restore(self, pages: List[int]) -> None:
+        """Return pages taken by :meth:`seize` to the free list."""
+        for p in pages:
+            self._seized.remove(p)
+            heapq.heappush(self._free, p)
+
     def table(self, slot: int) -> np.ndarray:
         """The slot's dense page table: ``(max_pages,)`` int32, owned
         pages first (logical page j of the sequence lives in physical
@@ -173,6 +203,11 @@ class PagePool:
             self.deferrals)
         registry.gauge("pages.hwm", **labels).set(self.hwm)
         registry.gauge("pages.live", **labels).set(self.live_pages)
+        if self._seized or self._seized_ever:
+            # fault-only series: fault-free runs keep today's exact
+            # metric-series census (bit-identical exports)
+            registry.gauge("pages.seized", **labels).set(
+                len(self._seized))
         registry.gauge("pages.pressure", **labels).set(self.pressure())
 
     # ----- live migration -------------------------------------------------

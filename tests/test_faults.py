@@ -1,0 +1,440 @@
+"""Chaos fabric (DESIGN.md §15): deterministic fault injection, crash
+detection + zero-token-loss re-placement, overload shedding, exactly-once
+client delivery, and the committed crash-recovery golden.
+
+The real-engine acceptance test (``test_engine_crash_matches_token_golden``)
+re-serves the golden-trace burst with worker 0 crashed mid-run and must
+reproduce ``tests/golden/serve_tokens.json`` bit-exactly — greedy argmax
+makes prefix-resume a pure function of the context, so recovery can never
+change a token, only when it appears.
+"""
+
+import json
+import pathlib
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.plan import SharingVector
+from repro.runtime.fault_tolerance import (Supervisor,
+                                           TransientWorkerFailure)
+from repro.serve.api import ServeClient
+from repro.serve.fabric import (FaultPlan, FaultSpec, build_sim_fleet,
+                                canonical_bursty_trace,
+                                canonical_chaos_plan,
+                                canonical_crash_plan,
+                                canonical_faulted_trace, parse_faults)
+from repro.serve.fabric.traffic import Arrival
+from repro.serve.recovery import RecoveryPolicy
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "fault_recovery.json"
+
+#: 4 sim workers on the level-2 diagonal: two 2-worker channel groups,
+#: so killing w0 leaves a live sibling on its own channel.
+VEC = SharingVector.diagonal(2)
+
+
+def _run(faults=None, recovery=None, trace=None, n_workers=4,
+         sharing=VEC, **kw):
+    router = build_sim_fleet(n_workers, sharing, faults=faults,
+                             recovery=recovery, **kw)
+    trace = canonical_bursty_trace() if trace is None else trace
+    return router, router.run(trace)
+
+
+def _tokens_by_rid(rep):
+    return {c.rid: c.new_tokens for c in rep.completions}
+
+
+# ----- spec / plan / grammar ----------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", 1.0, 0)
+    with pytest.raises(ValueError, match="positive duration"):
+        FaultSpec("stall", 1.0, 0)
+    with pytest.raises(ValueError, match="negative"):
+        FaultSpec("crash", -1.0, 0)
+    with pytest.raises(ValueError, match="frac"):
+        FaultSpec("page_pressure", 1.0, 0, duration_ns=5.0, frac=1.5)
+
+
+def test_parse_grammar():
+    plan = parse_faults("crash@4.5ms:w0, stall@2.2ms:w1:1ms,"
+                        "chan_stall@2100us:c1:500us,"
+                        "page_pressure@6.1ms:w2:1ms:0.5")
+    kinds = [s.kind for s in plan]
+    # FaultPlan sorts by time
+    assert kinds == ["chan_stall", "stall", "crash", "page_pressure"]
+    crash = next(s for s in plan if s.kind == "crash")
+    assert crash.t_ns == 4_500_000.0 and crash.target == 0
+    stall = next(s for s in plan if s.kind == "stall")
+    assert stall.duration_ns == 1_000_000.0
+
+
+def test_describe_round_trips():
+    for plan in (canonical_crash_plan(), canonical_chaos_plan()):
+        assert parse_faults(plan.describe()) == plan
+
+
+def test_parse_rejects_garbage():
+    for bad in ("crash", "crash@", "crash@1ms", "stall@1ms:w0",
+                "meteor@1ms:w0", "crash@oops:w0"):
+        with pytest.raises(ValueError):
+            parse_faults(bad)
+
+
+def test_plan_validate_bounds():
+    with pytest.raises(ValueError, match="worker 9 out of range"):
+        FaultPlan((FaultSpec("crash", 1.0, 9),)).validate(4, 2)
+    with pytest.raises(ValueError, match="channel 5 out of range"):
+        FaultPlan((FaultSpec("chan_stall", 1.0, 5,
+                             duration_ns=2.0),)).validate(4, 2)
+
+
+# ----- policy knobs --------------------------------------------------------
+
+def test_backoff_immediate_then_capped():
+    p = RecoveryPolicy(backoff_base_ns=100.0, backoff_cap_ns=500.0)
+    delays = [p.backoff_ns(a) for a in range(1, 7)]
+    assert delays[0] == 0.0                       # known-lost: retry now
+    assert delays[1:] == sorted(delays[1:])       # monotone
+    assert max(delays) == 500.0                   # capped
+
+
+def test_shed_thresholds_favor_high_priority():
+    p = RecoveryPolicy(shed_capacity=16)
+    thr = [p.shed_threshold(pri) for pri in range(4)]
+    assert thr == sorted(thr) and thr[0] == 8     # tier 0 sheds at C/2
+    assert all(t <= 16 for t in thr)              # never past capacity
+    assert RecoveryPolicy().shed_threshold(0) == 0  # 0 = unlimited
+
+
+# ----- determinism ---------------------------------------------------------
+
+def _report_key(rep):
+    return (tuple((c.rid, c.worker, c.t_done_ns, c.new_tokens)
+                  for c in rep.completions),
+            rep.makespan_ns, rep.faults_injected, rep.detections,
+            rep.retries, tuple(rep.recovered), tuple(rep.failed),
+            tuple(rep.shed), tuple(rep.recovery_latency_ns))
+
+
+def test_injector_determinism_bit_identical_reports():
+    """Same trace + same FaultPlan ⇒ bit-identical faulted FleetReport."""
+    trace = canonical_faulted_trace()
+    keys = [_report_key(_run(faults=canonical_chaos_plan(),
+                             trace=trace, page_size=16)[1])
+            for _ in range(2)]
+    assert keys[0] == keys[1]
+    assert keys[0][2] == len(canonical_chaos_plan())   # all faults fired
+
+
+def test_ft_mode_without_faults_changes_nothing():
+    """Recovery armed but no fault injected: probes and heartbeats ride
+    the heap, yet every completion (rid, worker, time, tokens) and the
+    makespan are identical to the plain fault-free run."""
+    _, plain = _run()
+    _, armed = _run(recovery=RecoveryPolicy())
+    assert _report_key(plain)[:2] == _report_key(armed)[:2]
+    assert armed.detections == 0 and armed.retries == 0
+    assert not armed.shed and not armed.failed
+
+
+# ----- crash recovery ------------------------------------------------------
+
+def test_canonical_crash_zero_token_loss():
+    _, healthy = _run()
+    router, rep = _run(faults=canonical_crash_plan())
+    assert rep.faults_injected == 1 and rep.detections == 1
+    assert rep.recovered and not rep.failed
+    assert rep.duplicate_completions == 0
+    # zero loss, zero duplication: same rids, same per-rid token counts
+    assert _tokens_by_rid(rep) == _tokens_by_rid(healthy)
+    # the dead worker emitted nothing after the fence
+    dead_t = canonical_crash_plan().specs[0].t_ns
+    assert all(c.t_done_ns <= dead_t for c in rep.completions
+               if c.worker == 0)
+    assert rep.recovery_latency_ns and min(rep.recovery_latency_ns) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(t_ms=st.floats(min_value=0.3, max_value=7.0),
+       w=st.integers(min_value=0, max_value=3))
+def test_crash_anywhere_exactly_once(t_ms, w):
+    """PROPERTY: a crash at any time on any worker never loses or
+    duplicates a request — every rid completes exactly once (or is an
+    accounted retry-exhaustion failure) with its full token budget."""
+    _, healthy = _run()
+    plan = FaultPlan((FaultSpec("crash", t_ms * 1e6, w),))
+    _, rep = _run(faults=plan)
+    rids = [c.rid for c in rep.completions]
+    assert len(rids) == len(set(rids))            # at most once
+    assert rep.duplicate_completions == 0
+    done = _tokens_by_rid(rep)
+    want = _tokens_by_rid(healthy)
+    assert set(done) | set(rep.failed) == set(want)   # at least once
+    assert all(done[r] == want[r] for r in done)      # full budgets
+
+
+def test_stall_below_deadline_is_invisible_to_tokens():
+    _, healthy = _run()
+    _, rep = _run(faults="stall@2.2ms:w1:300us",
+                  recovery=RecoveryPolicy(deadline_ns=800_000.0))
+    assert rep.detections == 0                    # survived the stall
+    assert _tokens_by_rid(rep) == _tokens_by_rid(healthy)
+
+
+def test_stall_past_deadline_fenced_as_crash():
+    """A wedge longer than the deadline is indistinguishable from death:
+    the worker gets fenced, its work re-placed — and when the stall
+    'ends' the fence voids the zombie, keeping delivery exactly-once."""
+    _, healthy = _run()
+    _, rep = _run(faults="stall@2.2ms:w1:3ms",
+                  recovery=RecoveryPolicy(deadline_ns=400_000.0))
+    assert rep.detections >= 1 and rep.recovered
+    assert rep.duplicate_completions == 0
+    assert _tokens_by_rid(rep) == _tokens_by_rid(healthy)
+
+
+def test_chaos_plan_conserves_every_request():
+    """All four fault kinds on one paged run: crash + stall + channel
+    hold + page spike, still exactly-once with full budgets."""
+    router, rep = _run(faults=canonical_chaos_plan(),
+                       trace=canonical_faulted_trace(), page_size=16)
+    _, healthy = _run(trace=canonical_faulted_trace(), page_size=16)
+    assert rep.faults_injected == 4
+    assert _tokens_by_rid(rep) == _tokens_by_rid(healthy)
+    assert rep.duplicate_completions == 0 and not rep.failed
+
+
+def test_recovery_conserves_pages():
+    """Dead-worker teardown returns every page: after a crashed + paged
+    run, each pool is fully free — no page leaked with its worker."""
+    router, rep = _run(faults=canonical_chaos_plan(),
+                       trace=canonical_faulted_trace(), page_size=16)
+    for w in router.workers:
+        pool = w.page_pool
+        assert pool.live_pages == 0 and pool.seized_pages == 0
+        assert pool.free_pages == pool.total_pages
+    assert rep.page_hwm_frac and 0 < rep.page_hwm_frac <= 1.0
+
+
+# ----- overload shedding ---------------------------------------------------
+
+def test_shed_before_accept_invariant():
+    """Capacity shedding refuses work at the door, never after: a shed
+    rid has no completion, no latency entry, and the survivors still
+    finish with full budgets."""
+    _, rep = _run(trace=canonical_faulted_trace(),
+                  recovery=RecoveryPolicy(shed_capacity=8))
+    assert rep.shed                                # the burst overflows
+    shed_rids = {rid for rid, _, _ in rep.shed}
+    done_rids = {c.rid for c in rep.completions}
+    assert not shed_rids & done_rids
+    assert not shed_rids & rep.latency_ns.keys()
+    assert all(reason in ("capacity", "deadline", "no_workers")
+               for _, reason, _ in rep.shed)
+    assert rep.n_arrivals == len(done_rids)        # accepted ⇒ completed
+    _, healthy = _run(trace=canonical_faulted_trace())
+    want = _tokens_by_rid(healthy)
+    assert all(n == want[r] for r, n in _tokens_by_rid(rep).items())
+
+
+def test_shed_capacity_spares_higher_priority():
+    """Tier thresholds are monotone, so under the same burst the lowest
+    tier sheds at a strictly higher rate than the highest tier."""
+    trace = canonical_faulted_trace()
+    _, rep = _run(trace=trace, recovery=RecoveryPolicy(shed_capacity=8))
+    pri = {a.rid: a.priority for a in trace}
+    by_tier = {p: [a for a in trace if a.priority == p] for p in (0, 2)}
+    shed_rids = {rid for rid, reason, _ in rep.shed
+                 if reason == "capacity"}
+    rate = {p: len([a for a in tier if a.rid in shed_rids]) / len(tier)
+            for p, tier in by_tier.items()}
+    assert rate[0] > rate[2]
+
+
+def test_expired_deadline_shed_on_arrival():
+    import dataclasses as dc
+    trace = list(canonical_bursty_trace())
+    # expire one later-burst arrival (t_ns > 0, so half of it is a real
+    # deadline in the past — not the -1 no-deadline sentinel)
+    i = next(i for i, a in enumerate(trace) if a.t_ns > 0)
+    trace[i] = dc.replace(trace[i], deadline_ns=trace[i].t_ns / 2.0)
+    _, rep = _run(trace=trace, recovery=RecoveryPolicy())
+    assert rep.shed == [(trace[i].rid, "deadline", trace[i].t_ns)]
+    assert len(rep.completions) == len(trace) - 1
+
+
+def test_all_workers_dead_sheds_new_arrivals():
+    """With every worker fenced and detected, late arrivals are shed
+    with reason no_workers instead of queueing forever."""
+    trace = [Arrival(rid=r, t_ns=1_500_000.0 + r * 1_000.0, prompt_len=32,
+                     max_new_tokens=8) for r in range(6)]
+    _, rep = _run(faults="crash@100us:w0,crash@100us:w1,"
+                         "crash@100us:w2,crash@100us:w3",
+                  recovery=RecoveryPolicy(deadline_ns=400_000.0),
+                  trace=trace)
+    assert rep.detections == 4 and not rep.completions
+    assert sorted(rid for rid, _, _ in rep.shed) == list(range(6))
+    assert all(reason == "no_workers" for _, reason, _ in rep.shed)
+
+
+# ----- exactly-once client cursor ------------------------------------------
+
+class _Sink:
+    """Bare object carrying just the state ``ServeClient._ingest`` uses."""
+
+    def __init__(self):
+        self.results = {}
+        self._cursor = {}
+        self.dedup_conflicts = 0
+
+
+def test_ingest_cursor_is_idempotent():
+    c = _Sink()
+    ingest = ServeClient._ingest
+    assert ingest(c, 7, [1, 2, 3]) == [1, 2, 3]
+    assert ingest(c, 7, [1, 2, 3]) == [1, 2, 3]        # exact replay
+    assert ingest(c, 7, [1, 2, 3, 4, 5]) == [1, 2, 3, 4, 5]  # extension
+    assert ingest(c, 7, [1, 2]) == [1, 2, 3, 4, 5]     # stale replay
+    assert c.dedup_conflicts == 0
+    assert c._cursor[7] == 5
+
+
+def test_ingest_cursor_first_wins_on_conflict():
+    c = _Sink()
+    ServeClient._ingest(c, 7, [1, 2, 3])
+    assert ServeClient._ingest(c, 7, [9, 9, 9, 9]) == [1, 2, 3]
+    assert c.dedup_conflicts == 1
+    assert c.results[7] == [1, 2, 3]
+
+
+# ----- supervisor budget (satellite regression) ----------------------------
+
+def test_supervisor_budget_is_consecutive_not_lifetime():
+    """Each step weathers max_restarts preemptions then succeeds: the
+    lifetime restart count far exceeds the budget, yet the job finishes
+    — a completed step resets the give-up counter."""
+    per_step, last = {}, {"s": 0}
+
+    def step_fn(step):
+        last["s"] = step
+        n = per_step.get(step, 0)
+        if n < 3:
+            per_step[step] = n + 1
+            raise TransientWorkerFailure("preempt")
+        return {"step": step}
+
+    sup = Supervisor(step_fn, lambda: last["s"], max_restarts=3)
+    assert sup.run(0, 5) == {"step": 4}
+    assert sup.restarts == 15                      # 3 per step, 5 steps
+    assert sup.consecutive_failures == 0
+
+
+def test_supervisor_still_gives_up_on_crash_loop():
+    def step_fn(step):
+        raise TransientWorkerFailure("always")
+
+    sup = Supervisor(step_fn, lambda: 0, max_restarts=3)
+    with pytest.raises(TransientWorkerFailure):
+        sup.run(0, 10)
+    assert sup.consecutive_failures == 4
+
+
+# ----- committed golden ----------------------------------------------------
+
+def _golden_record():
+    router, rep = _run(faults=canonical_chaos_plan(),
+                       trace=canonical_faulted_trace(), page_size=16)
+    return {
+        "trace": "canonical_faulted_trace",
+        "faults": canonical_chaos_plan().describe(),
+        "n_completed": rep.n_completed,
+        "total_new_tokens": rep.total_new_tokens,
+        "makespan_ns": rep.makespan_ns,
+        "faults_injected": rep.faults_injected,
+        "detections": rep.detections,
+        "retries": rep.retries,
+        "recovered": sorted(rep.recovered),
+        "failed": sorted(rep.failed),
+        "shed": [[rid, reason, t] for rid, reason, t in rep.shed],
+        "recovery_latency_ns": list(rep.recovery_latency_ns),
+        "duplicate_completions": rep.duplicate_completions,
+        "tokens": {str(c.rid): c.new_tokens for c in rep.completions},
+    }
+
+
+def test_crash_recovery_golden(request):
+    """The canonical chaos run is pinned bit-exactly to a committed
+    golden — any drift in detection timing, retry counts, or token
+    accounting fails here first.  --regen-goldens rewrites it."""
+    record = _golden_record()
+    if request.config.getoption("--regen-goldens"):
+        GOLDEN_PATH.write_text(json.dumps(record, indent=1,
+                                          sort_keys=True) + "\n")
+        return
+    if not GOLDEN_PATH.exists():
+        pytest.fail(f"{GOLDEN_PATH} missing — run with --regen-goldens")
+    committed = json.loads(GOLDEN_PATH.read_text())
+    assert record == committed
+
+
+# ----- real-engine acceptance: zero token loss -----------------------------
+
+def test_engine_crash_matches_token_golden():
+    """Kill 1 of 4 real engine workers mid-run and re-serve the golden
+    burst: every client stream must be bit-identical to the committed
+    fault-free golden (``serve_tokens.json``) — tokens move in time,
+    never in value, and none are lost or duplicated."""
+    import jax
+    import numpy as np
+    from repro import serve
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+
+    golden = json.loads(
+        (pathlib.Path(__file__).parent / "golden" /
+         "serve_tokens.json").read_text())["tokens"]
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    trace = canonical_bursty_trace()[:24]
+    # engine steps cost ~30 µs of virtual time: widen the deadline past
+    # the largest healthy step so busy workers never get fenced
+    client = serve.connect(
+        cfg, SharingVector.diagonal(2), params=params, n_workers=4,
+        n_slots=4, max_len=64, faults="crash@0.6ms:w0",
+        recovery=RecoveryPolicy(deadline_ns=600_000.0))
+
+    def prompt_of(a):
+        rng = np.random.default_rng(a.rid)
+        return rng.integers(1, cfg.vocab, size=a.prompt_len) \
+            .astype(np.int32)
+
+    for a in trace:
+        client.submit(prompt_of(a), max_new_tokens=a.max_new_tokens,
+                      at_ns=a.t_ns, session=a.session)
+    out = client.run()
+    rep = client.report
+    assert rep.faults_injected == 1 and rep.detections == 1
+    assert rep.recovered and not rep.failed and not rep.shed
+    assert rep.duplicate_completions == 0
+    assert client.dedup_conflicts == 0
+    tokens = {str(rid): list(map(int, t)) for rid, t in out.items()}
+    assert tokens == golden
+
+
+def test_faults_refused_off_fleet():
+    import jax
+    from repro import serve
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="fleet"):
+        serve.connect(cfg, SharingVector.diagonal(1), params=params,
+                      n_workers=1, faults="crash@1ms:w0")

@@ -26,7 +26,7 @@ import itertools
 
 from benchmarks.common import row, write_bench_json
 from repro.core.plan import SharingVector
-from repro.serve.fabric import build_sim_fleet, canonical_bursty_trace
+from repro.tune import bench_metrics, evaluate_vector
 
 N_WORKERS = 8
 N_SLOTS = 4
@@ -46,26 +46,17 @@ def _label(v: SharingVector) -> str:
     return v.label
 
 
-def run_one(vector: SharingVector, trace):
-    router = build_sim_fleet(N_WORKERS, vector, n_slots=N_SLOTS)
-    rep = router.run(trace)
-    assert rep.n_completed == rep.n_arrivals, (vector, rep.n_completed)
-    return rep
+def run_one(vector: SharingVector, trace="canonical_bursty"):
+    """Measure one vector through THE shared sim-evaluation loop
+    (``tune.evaluate`` — the tuner's evaluator, DESIGN.md §16)."""
+    m = evaluate_vector(vector, trace, n_workers=N_WORKERS,
+                        n_slots=N_SLOTS)
+    assert m.completed == m.n_arrivals, (vector, m.completed)
+    return m
 
 
-def metrics_of(vector: SharingVector, rep) -> dict:
-    return {
-        "tok_per_s": rep.tok_per_s,
-        "p50_ms": rep.latency_percentile(0.5) / 1e6,
-        "p99_ms": rep.latency_percentile(0.99) / 1e6,
-        "occupancy": rep.occupancy,
-        "fairness": rep.fairness,
-        "lock_wait_ns": rep.lock_wait_ns,
-        "footprint": vector.footprint_score(N_WORKERS, N_SLOTS),
-        "footprint_per_resource": vector.footprint(N_WORKERS, N_SLOTS),
-        "diagonal": vector.is_diagonal,
-        "completed": rep.n_completed,
-    }
+def metrics_of(vector: SharingVector, m) -> dict:
+    return bench_metrics(vector, m, n_workers=N_WORKERS, n_slots=N_SLOTS)
 
 
 def main():
@@ -73,11 +64,9 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args([] if __name__ != "__main__" else None)
 
-    trace = canonical_bursty_trace()
     rows, results = [], {}
     for vector in DIAGONALS + OFF_DIAGONAL:
-        rep = run_one(vector, trace)
-        m = metrics_of(vector, rep)
+        m = metrics_of(vector, run_one(vector))
         results[vector] = m
         rows.append({"config": {
             "slots_level": vector.slots, "channels_level": vector.channels,

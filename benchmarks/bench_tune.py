@@ -1,0 +1,132 @@
+"""Plan-space auto-tuner bench (DESIGN.md §16): deterministic search
+over the sharing cube on the canonical bursty trace.
+
+Three driver rows (grid / random / anneal, fixed seed) measure what
+each search buys for its eval budget: the frontier's best throughput,
+best tail latency, and smallest footprint, plus how many unique
+simulations were paid for and how many plans survived dominance.
+
+The acceptance row restates the paper's headline through the tuner: a
+<= 64-eval search must emit a Pareto front containing a plan with
+>= 0.99x the best hand-written diagonal's throughput at <= 0.5x its
+footprint — the tuner has to FIND the scalable middle, not be handed
+it.  The reproducibility row re-runs the annealing search with the same
+seed and requires the identical frontier and a byte-identical SQLite
+plan repository.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_tune
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import tempfile
+
+from benchmarks.common import row, write_bench_json
+from repro.tune import PlanRepository, SPACES, Tuner
+
+SPACE_NAME = "sharing"
+TRACE = "canonical_bursty"
+BUDGET = 64
+SEED = 0
+
+
+def _cfg(driver: str, **extra) -> dict:
+    return {"space": SPACE_NAME, "driver": driver, "trace": TRACE,
+            "budget_evals": BUDGET, "seed": SEED, **extra}
+
+
+def _sha256(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def run_driver(driver: str):
+    return Tuner(SPACES[SPACE_NAME], trace=TRACE, driver=driver,
+                 budget_evals=BUDGET, seed=SEED).run()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    rows, results = [], {}
+    for driver in ("grid", "random", "anneal"):
+        res = run_driver(driver)
+        results[driver] = res
+        best_tok = res.best_by("tok_per_s")
+        best_p99 = res.best_by("p99_ms")
+        best_foot = res.best_by("footprint")
+        m = {
+            "tok_per_s": best_tok.tok_per_s,
+            "p99_ms": best_p99.p99_ms,
+            "footprint": best_foot.footprint,
+            "evals": res.n_evals,
+            "frontier_size": len(res.front),
+        }
+        rows.append({"config": _cfg(driver), "metrics": m})
+        row(f"tune_{driver}",
+            1e3 / max(m["tok_per_s"], 1e-9) * 1e6,
+            f"front={m['frontier_size']}|evals={m['evals']}"
+            f"|best={best_tok.plan.vector.label}"
+            f"@{m['tok_per_s']:.0f}tok/s"
+            f"|min_foot={m['footprint'] * 100:.1f}%")
+
+    # ----- acceptance: the tuner finds the scalable middle ---------------
+    grid = results["grid"]
+    diagonals = {}
+    for point, meas in grid.evals:
+        vec = point.vector
+        if vec.is_diagonal and meas.feasible:
+            diagonals[vec] = meas
+    best_diag = max(diagonals.values(), key=lambda m: m.tok_per_s)
+    winners = [p for p in grid.front
+               if p.tok_per_s >= 0.99 * best_diag.tok_per_s
+               and p.footprint <= 0.5 * best_diag.footprint]
+    ok = bool(winners)
+    pick = winners[0] if winners else grid.front[0]
+    ratio = pick.tok_per_s / best_diag.tok_per_s
+    foot = pick.footprint / best_diag.footprint
+    rows.append({"config": _cfg("grid", baseline="best_diagonal"),
+                 "metrics": {
+                     "tok_per_s": pick.tok_per_s,
+                     "footprint": pick.footprint,
+                     "vs_best_diagonal": ratio,
+                     "footprint_vs_best_diagonal": foot,
+                     "frontier_size": len(grid.front),
+                     "acceptance": ok}})
+    row("tune_acceptance",
+        1e3 / max(pick.tok_per_s, 1e-9) * 1e6,
+        f"{pick.plan.vector.label}|vs_best_diag={ratio:.3f}x"
+        f"|footprint={foot * 100:.1f}%"
+        f"|acceptance={'PASS' if ok else 'FAIL'}")
+    assert ok, (ratio, foot)
+
+    # ----- reproducibility: same seed => same frontier, same bytes -------
+    rerun = run_driver("anneal")
+    base = results["anneal"]
+    same_front = ([(p.plan, p.objectives) for p in base.front]
+                  == [(p.plan, p.objectives) for p in rerun.front])
+    with tempfile.TemporaryDirectory() as tmp:
+        paths = [os.path.join(tmp, f"repo_{i}.sqlite") for i in (0, 1)]
+        for path, res in zip(paths, (base, rerun)):
+            with PlanRepository(path, fresh=True) as repo:
+                repo.store_front(res.front, traffic=res.trace)
+        same_bytes = _sha256(paths[0]) == _sha256(paths[1])
+    rows.append({"config": _cfg("anneal", check="reproducibility"),
+                 "metrics": {"reproducible": same_front,
+                             "sqlite_identical": same_bytes,
+                             "frontier_size": len(base.front)}})
+    row("tune_reproducible", 0.0,
+        f"frontier={'same' if same_front else 'DIFFERS'}"
+        f"|sqlite={'identical' if same_bytes else 'DIFFERS'}")
+    assert same_front and same_bytes
+
+    write_bench_json("tune", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

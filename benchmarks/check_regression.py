@@ -48,7 +48,8 @@ BASELINE_DIR = os.path.join(HERE, "baselines")
 #: qualifies: its gated quantities (virtual throughput, trace/series
 #: volumes, the 0.0 overhead fractions) are all schedule-determined —
 #: only its ungated wall_*_ms fields touch the host clock.
-VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs", "faults"}
+VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs", "faults",
+                "tune"}
 
 #: metric -> (direction, kind).  direction: which way is WORSE ("either"
 #: gates both ways).  kind "perf" gates per the bench's time domain;
@@ -95,6 +96,16 @@ GATES: Dict[str, Tuple[str, str]] = {
     "trace_valid": ("flag", "flag"),
     "identical_reports": ("flag", "flag"),
     "acceptance": ("flag", "flag"),
+    # plan-space auto-tuner (bench_tune): deterministic search ledgers —
+    # the eval budget actually consumed and the frontier's size are pure
+    # functions of (space, driver, seed), and the same-seed rerun must
+    # stay byte-reproducible
+    "evals": ("either", "struct"),
+    "frontier_size": ("either", "struct"),
+    "vs_best_diagonal": ("lower", "exact"),
+    "footprint_vs_best_diagonal": ("higher", "exact"),
+    "reproducible": ("flag", "flag"),
+    "sqlite_identical": ("flag", "flag"),
 }
 
 

@@ -4,11 +4,16 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 """§Perf hillclimb driver: for each of the three chosen cells, lower the
 paper-faithful baseline and each named optimization variant, record the
 roofline terms, and append the hypothesis -> change -> before/after log to
-experiments/hillclimb.json.
+the --out file (default experiments/hillclimb.json).
 
-  PYTHONPATH=src python -m benchmarks.hillclimb
+  PYTHONPATH=src python -m benchmarks.hillclimb [--out PATH]
+
+This is the single-objective ancestor of the ``repro.tune`` search
+drivers (DESIGN.md §16): hand-written hypothesis -> variant -> measure
+loops, where the tuner walks the same move structure automatically.
 """
 
+import argparse
 import json
 
 from repro.launch.dryrun import lower_cell
@@ -61,7 +66,7 @@ PLANS = [
 ]
 
 
-def run():
+def run(out_path="experiments/hillclimb.json"):
     mesh = make_production_mesh()
     out = []
     for arch, shape, variants in PLANS:
@@ -95,11 +100,21 @@ def run():
                          "error": f"{type(e).__name__}: {e}"}
             out.append(entry)
             print(json.dumps(entry), flush=True)
-    os.makedirs("experiments", exist_ok=True)
-    path = "experiments/hillclimb.json"
-    prev = json.load(open(path)) if os.path.exists(path) else []
-    json.dump(prev + out, open(path, "w"), indent=1)
+    parent = os.path.dirname(out_path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    prev = json.load(open(out_path)) if os.path.exists(out_path) else []
+    json.dump(prev + out, open(out_path, "w"), indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/hillclimb.json",
+                    help="hypothesis log to append to")
+    args = ap.parse_args(argv if argv is not None
+                         else ([] if __name__ != "__main__" else None))
+    run(args.out)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -22,7 +22,9 @@ BENCHES = [
     "bench_paged",
     "bench_obs",
     "bench_faults",
+    "bench_tune",
     "roofline",
+    "hillclimb",
 ]
 
 

@@ -98,7 +98,8 @@ class Replanner:
                  demote_patience: int = 3, cooldown: int = 1,
                  hi: float = 0.7, lo: float = 0.2,
                  depth_scale: float = 2.0, compile_scale: float = 4.0,
-                 budget: Optional[float] = None, paged: bool = False):
+                 budget: Optional[float] = None, paged: bool = False,
+                 repository=None):
         if not 0.0 <= lo < hi <= 1.0:
             raise ValueError(f"need 0 <= lo < hi <= 1, got lo={lo} hi={hi}")
         if window < 1 or patience < 1 or demote_patience < 1 \
@@ -121,6 +122,13 @@ class Replanner:
         #: deployment (and its committed transition traces) is unchanged.
         self.paged = bool(paged)
         self._resources = PAGED_RESOURCES if paged else RESOURCES
+        #: optional tuned-plan store (duck-typed ``frontier_vectors``,
+        #: canonically ``tune.PlanRepository``, DESIGN.md §16): when the
+        #: hysteresis fires, jump to the NEAREST stored Pareto-frontier
+        #: vector in the fired direction instead of stepping one level
+        #: on one axis.  None (the default) keeps the single-axis
+        #: stepping bit-identical to the historical controller.
+        self.repository = repository
         self.vector = self._fit_budget(vector or SharingVector.diagonal(2))
         self._win: deque = deque(maxlen=window)
         self._streak: Dict[str, int] = {r: 0 for r in self._resources}
@@ -240,14 +248,57 @@ class Replanner:
                     cand = dataclasses.replace(self.vector, **moves)
         if not moves or cand == self.vector:
             return None
+        if self.repository is not None:
+            jump = self._repository_jump(moves)
+            if jump is not None:
+                # repository-guided transition: land ON a measured
+                # frontier plan instead of an arbitrary intermediate
+                # point, in possibly several levels at once
+                cand = jump
+                moves = {r: getattr(cand, r) for r in self._resources
+                         if getattr(cand, r) != getattr(self.vector, r)}
         for r in moves:
             self._streak[r] = 0
             slow = -1 if r == "pages" else +1
-            if moves[r] - getattr(self.vector, r) == slow:
+            if (moves[r] - getattr(self.vector, r)) * slow > 0:
                 self._cool[r] = self.cooldown   # idleness releases lazily
         self.vector = cand
         self.transitions.append((self._windows, cand))
         return cand
+
+    def _repository_jump(self, moves: Dict[str, int]
+                         ) -> Optional[SharingVector]:
+        """The nearest stored frontier vector that moves EVERY fired
+        resource in its fired direction (DESIGN.md §16) — the hysteresis
+        decides *when* and *which way*, the repository decides *where to
+        land*.  None (single-axis fallback) when no stored plan agrees:
+        the controller never trusts a tuned plan against live pressure.
+
+        Candidates must hold the pages axis fixed when the controller
+        does not own it (``paged=False``) and must fit the footprint
+        budget; "nearest" is L1 distance over all four axes with a
+        deterministic per-axis tie-break."""
+        cur = self.vector
+        want = {r: moves[r] - getattr(cur, r) for r in moves}
+        cands = []
+        for vec in self.repository.frontier_vectors(
+                n_workers=self.n_workers, n_slots=self.n_slots):
+            if vec == cur:
+                continue
+            if not self.paged and vec.pages != cur.pages:
+                continue
+            if self.budget is not None \
+                    and self._score(vec) > self.budget:
+                continue
+            if all((getattr(vec, r) - getattr(cur, r)) * d > 0
+                   for r, d in want.items()):
+                cands.append(vec)
+        if not cands:
+            return None
+        return min(cands, key=lambda v: (
+            sum(abs(getattr(v, r) - getattr(cur, r))
+                for r in PAGED_RESOURCES),
+            v.slots, v.channels, v.execs, v.pages))
 
     # ----- derived --------------------------------------------------------
     def footprint_score(self) -> float:

@@ -224,6 +224,16 @@ class Hints:
                 and not 0.0 < self.memory_budget <= 1.0:
             raise ValueError("memory_budget must be in (0, 1]")
 
+    def resolve(self, *, n_workers: int = 1, n_slots: int = 4,
+                repository=None,
+                use_repository: bool = True) -> "SharingVector":
+        """Resolve these hints to a ``SharingVector`` — the method
+        spelling of module-level ``resolve``, including the optional
+        plan-repository consultation (DESIGN.md §16)."""
+        return resolve(self, n_workers=n_workers, n_slots=n_slots,
+                       repository=repository,
+                       use_repository=use_repository)
+
 
 # latency target (ms) -> base sharing level: tighter targets buy more
 # dedicated resources.  Monotone by construction.
@@ -280,8 +290,9 @@ def fit_budget(vec: SharingVector, budget: Optional[float], *,
     return vec
 
 
-def resolve(hints: Hints, *, n_workers: int = 1,
-            n_slots: int = 4) -> SharingVector:
+def resolve(hints: Hints, *, n_workers: int = 1, n_slots: int = 4,
+            repository=None, use_repository: bool = True
+            ) -> SharingVector:
     """Deterministically map intent to a ``SharingVector``.
 
     Guarantees (property-tested):
@@ -290,7 +301,21 @@ def resolve(hints: Hints, *, n_workers: int = 1,
         any resource's sharing level (budget aside);
       * a ``footprint_budget`` is met whenever the fully shared vector
         meets it.
+
+    ``repository`` (DESIGN.md §16) is an optional tuned-plan store —
+    anything with ``resolve_hints(hints, n_workers=, n_slots=) ->
+    Optional[SharingVector]``, canonically ``tune.PlanRepository``.  It
+    is consulted FIRST: a stored Pareto-frontier plan measured for this
+    fleet size and satisfying the hints' constraints wins over the
+    analytic mapping below.  A miss (or ``use_repository=False``, the
+    explicit escape hatch) falls back to the analytic planner, whose
+    output is bit-identical to the repository-less behavior.
     """
+    if repository is not None and use_repository:
+        vec = repository.resolve_hints(hints, n_workers=n_workers,
+                                       n_slots=n_slots)
+        if vec is not None:
+            return vec
     base = _latency_level(hints.latency_target_ms)
     channels = min(4, base + (1 if hints.burstiness >= 0.5 else 0))
     vec = SharingVector(slots=base, channels=channels,
@@ -386,10 +411,14 @@ class EndpointPlan:
         return cls.from_category(category, **overrides)
 
     @classmethod
-    def from_hints(cls, hints: Hints, **overrides) -> "EndpointPlan":
+    def from_hints(cls, hints: Hints, *, repository=None,
+                   use_repository: bool = True,
+                   **overrides) -> "EndpointPlan":
         n_workers = overrides.get("n_workers", 1)
         n_slots = overrides.get("n_slots", 4)
-        vec = resolve(hints, n_workers=n_workers, n_slots=n_slots)
+        vec = resolve(hints, n_workers=n_workers, n_slots=n_slots,
+                      repository=repository,
+                      use_repository=use_repository)
         if hints.session_ordering:
             overrides.setdefault("placement", "session_affinity")
         if hints.footprint_budget is not None:

@@ -125,13 +125,20 @@ class ServeClient:
     def __init__(self, cfg, params, plan: EndpointPlan,
                  obs: Optional[Observability] = None,
                  faults: Union[FaultPlan, str, None] = None,
-                 recovery: Optional[RecoveryPolicy] = None):
+                 recovery: Optional[RecoveryPolicy] = None,
+                 plan_repository=None):
         if plan.placement not in POLICIES:
             raise ValueError(f"unknown placement {plan.placement!r}; "
                              f"one of {sorted(POLICIES)}")
         self.cfg = cfg
         self.params = params
         self.plan = plan
+        #: tuned-plan store (DESIGN.md §16, duck-typed
+        #: ``tune.PlanRepository``): consulted by hint re-resolution in
+        #: ``replan`` and handed to the adaptive controller so live
+        #: transitions jump to measured frontier plans.  None = the
+        #: historical analytic/hysteresis behavior, bit-identical.
+        self.plan_repository = plan_repository
         #: observability bundle (DESIGN.md §14): defaults to the no-op
         #: recorder/registry; ``connect(..., obs=enabled_obs())`` records
         #: every run's spans + metrics for --trace-out / --metrics-out
@@ -485,7 +492,8 @@ class ServeClient:
         plan = self.plan
         adapt = Replanner(plan.vector, n_workers=plan.n_workers,
                           n_slots=plan.n_slots, budget=plan.adapt_budget,
-                          paged=plan.paged)
+                          paged=plan.paged,
+                          repository=self.plan_repository)
         if adapt.vector != plan.vector:
             self._apply_vector(adapt.vector)
             self.plan = dataclasses.replace(plan, preset=None,
@@ -544,8 +552,14 @@ class ServeClient:
                     keep.pop("placement")
                 if spec.footprint_budget is not None:
                     keep.pop("adapt_budget")
-            keep.update(overrides)
-            new = as_plan(spec, **keep)
+                keep.update(overrides)
+                # hint re-resolution consults the attached tuned-plan
+                # repository first, exactly like connect (DESIGN.md §16)
+                new = EndpointPlan.from_hints(
+                    spec, repository=self.plan_repository, **keep)
+            else:
+                keep.update(overrides)
+                new = as_plan(spec, **keep)
         for f in STRUCTURAL_FIELDS:
             if getattr(new, f) != getattr(plan, f):
                 raise ValueError(
@@ -595,6 +609,7 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
             obs: Optional[Observability] = None,
             faults: Union[FaultPlan, str, None] = None,
             recovery: Optional[RecoveryPolicy] = None,
+            plan_repository=None, use_repository: bool = True,
             **overrides) -> ServeClient:
     """Connect a serving session: resolve ``plan`` (an ``EndpointPlan``,
     ``Hints``, ``SharingVector``, ``Category``/preset name, or None for
@@ -606,12 +621,25 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
     ``FaultPlan`` or its ``"crash@4.5ms:w0,stall@2ms:w1:1ms"`` grammar)
     injects deterministic failures into every fleet run; ``recovery``
     (a ``serve.RecoveryPolicy``) tunes detection, retry backoff, and
-    overload shedding — both need the fleet executor."""
-    resolved = as_plan(plan, **overrides)
+    overload shedding — both need the fleet executor.
+
+    ``plan_repository`` (DESIGN.md §16) attaches a tuned-plan store
+    (``tune.PlanRepository``): ``Hints`` resolution consults its stored
+    Pareto-frontier plans before the analytic planner
+    (``use_repository=False`` is the explicit escape hatch — attach the
+    store for the adaptive controller but resolve analytically), and
+    the adaptive controller jumps between its frontier plans instead of
+    stepping one sharing axis at a time."""
+    if isinstance(plan, Hints) and plan_repository is not None:
+        resolved = EndpointPlan.from_hints(
+            plan, repository=plan_repository,
+            use_repository=use_repository, **overrides)
+    else:
+        resolved = as_plan(plan, **overrides)
     if params is None:
         params = Model(cfg).init(jax.random.PRNGKey(seed))
     return ServeClient(cfg, params, resolved, obs=obs, faults=faults,
-                       recovery=recovery)
+                       recovery=recovery, plan_repository=plan_repository)
 
 
 # connect(..., adaptive=True) is the one-flag spelling of live

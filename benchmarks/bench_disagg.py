@@ -1,0 +1,153 @@
+"""Prefill/decode disaggregation: throughput floor, decode-tail
+improvement, and live-migration token conservation (DESIGN.md §17).
+
+All rows run the virtual-time sim fleet — deterministic pure
+arithmetic, so every metric gates tightly in ``check_regression.py``.
+
+Rows:
+
+* ``disagg_prefill_heavy`` — THE acceptance row: on a prefill-heavy
+  trace (3/4 of arrivals carry 256-token prompts, tiny decode budgets,
+  steady poisson load) the ``2P+2D`` split keeps >= 0.9x the co-located
+  4-worker fleet's throughput while IMPROVING the decode p99 (the
+  latency tail of the short-prompt decode-dominant foreground — on the
+  co-located fleet those requests stall behind long prefill admits on
+  the same worker; a decode-only worker never pays one).
+* ``disagg_session`` — the canonical session trace under ``2P+2D``:
+  request conservation vs co-located, one handoff per completion,
+  size-proportional KV movement.
+* ``disagg_migration`` — a decode→decode live migration mid-run: the
+  moved sessions finish elsewhere with identical per-request token
+  counts (zero lost, zero duplicated).
+
+  PYTHONPATH=src:. python -m benchmarks.bench_disagg
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import row, write_bench_json
+from repro.core.endpoints import Category
+from repro.serve.fabric import (build_sim_fleet, bursty_trace,
+                                poisson_trace, session_trace)
+
+N_WORKERS = 4
+ROLES = "2P+2D"
+#: the prefill-heavy acceptance trace: mostly long prompts, all decode
+#: budgets tiny — the regime the role split is FOR
+PREFILL_HEAVY = dict(mean_gap_ns=20_000.0,
+                     prompt_lens=(16, 256, 256, 256),
+                     new_tokens=(2, 4), seed=0)
+#: foreground = the short-prompt requests whose decode tail we track
+FOREGROUND_PROMPT = 16
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
+
+
+def _run(trace, roles=None, migrations=None, **kw):
+    return build_sim_fleet(N_WORKERS, Category.SHARED_DYNAMIC,
+                           roles=roles, migrations=migrations,
+                           max_len=512, **kw).run(trace)
+
+
+def _tokens(rep):
+    return {c.rid: c.new_tokens for c in rep.completions}
+
+
+def _decode_p99_ms(rep, trace):
+    arr = {a.rid: a for a in trace}
+    fg = [rep.latency_ns[c.rid] for c in rep.completions
+          if arr[c.rid].prompt_len <= FOREGROUND_PROMPT]
+    return _pct(fg, 0.99) / 1e6
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args([] if __name__ != "__main__" else None)
+
+    rows = []
+
+    # --- prefill-heavy acceptance: tput floor + decode tail -------------
+    trace = poisson_trace(60, **PREFILL_HEAVY)
+    base = _run(trace)
+    dis = _run(trace, roles=ROLES)
+    vs = dis.tok_per_s / base.tok_per_s
+    d_p99, b_p99 = _decode_p99_ms(dis, trace), _decode_p99_ms(base, trace)
+    conserved = _tokens(dis) == _tokens(base)
+    ok = vs >= 0.9 and d_p99 < b_p99 and conserved
+    rows.append({"config": {"scenario": "prefill_heavy", "roles": ROLES,
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": dis.tok_per_s,
+                     "vs_colocated": vs,
+                     "decode_p99_ms": d_p99,
+                     "colocated_decode_p99_ms": b_p99,
+                     "tokens": dis.total_new_tokens,
+                     "completed": dis.n_completed,
+                     "handoffs": dis.handoffs,
+                     "kv_tokens_moved": dis.kv_tokens_moved,
+                     "kv_bytes_moved": dis.kv_bytes_moved,
+                     "acceptance": ok}})
+    row("disagg_prefill_heavy", 1e3 / max(dis.tok_per_s, 1e-9) * 1e6,
+        f"vs_colocated={vs:.3f}x|decode_p99={d_p99:.2f}ms"
+        f"<{b_p99:.2f}ms|handoffs={dis.handoffs}"
+        f"|acceptance={'PASS' if ok else 'FAIL'}")
+    assert ok, (vs, d_p99, b_p99, conserved)
+
+    # --- canonical session trace: conservation + handoff accounting -----
+    strace = session_trace(16, 4, seed=0)
+    sbase = _run(strace)
+    sdis = _run(strace, roles=ROLES)
+    s_ok = _tokens(sdis) == _tokens(sbase) \
+        and sdis.handoffs == sdis.n_completed \
+        and sdis.kv_tokens_moved > 0
+    rows.append({"config": {"scenario": "session", "roles": ROLES,
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": sdis.tok_per_s,
+                     "tokens": sdis.total_new_tokens,
+                     "completed": sdis.n_completed,
+                     "handoffs": sdis.handoffs,
+                     "kv_tokens_moved": sdis.kv_tokens_moved,
+                     "kv_bytes_moved": sdis.kv_bytes_moved,
+                     "acceptance": s_ok}})
+    row("disagg_session", 1e3 / max(sdis.tok_per_s, 1e-9) * 1e6,
+        f"handoffs={sdis.handoffs}|kv_tokens={sdis.kv_tokens_moved}"
+        f"|kv_bytes={sdis.kv_bytes_moved}"
+        f"|acceptance={'PASS' if s_ok else 'FAIL'}")
+    assert s_ok
+
+    # --- live migration: zero token loss --------------------------------
+    mtrace = bursty_trace(24, burst_size=4, new_tokens=(6, 12), seed=2)
+    mbase = _run(mtrace)
+    mig = _run(mtrace, migrations=[(150_000.0, 0, 2)])
+    m_ok = _tokens(mig) == _tokens(mbase) and mig.migrations == 1 \
+        and mig.handoffs > 0
+    rows.append({"config": {"scenario": "migration",
+                            "migrations": [[150_000.0, 0, 2]],
+                            "workers": N_WORKERS},
+                 "metrics": {
+                     "tok_per_s": mig.tok_per_s,
+                     "tokens": mig.total_new_tokens,
+                     "completed": mig.n_completed,
+                     "migrations": mig.migrations,
+                     "handoffs": mig.handoffs,
+                     "kv_tokens_moved": mig.kv_tokens_moved,
+                     "kv_bytes_moved": mig.kv_bytes_moved,
+                     "acceptance": m_ok}})
+    row("disagg_migration", 1e3 / max(mig.tok_per_s, 1e-9) * 1e6,
+        f"migrations={mig.migrations}|handoffs={mig.handoffs}"
+        f"|conserved={_tokens(mig) == _tokens(mbase)}"
+        f"|acceptance={'PASS' if m_ok else 'FAIL'}")
+    assert m_ok
+
+    write_bench_json("disagg", rows, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

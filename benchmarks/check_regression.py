@@ -49,7 +49,7 @@ BASELINE_DIR = os.path.join(HERE, "baselines")
 #: volumes, the 0.0 overhead fractions) are all schedule-determined —
 #: only its ungated wall_*_ms fields touch the host clock.
 VIRTUAL_TIME = {"fabric", "plan", "adapt", "paged", "obs", "faults",
-                "tune"}
+                "tune", "disagg"}
 
 #: metric -> (direction, kind).  direction: which way is WORSE ("either"
 #: gates both ways).  kind "perf" gates per the bench's time domain;
@@ -93,6 +93,16 @@ GATES: Dict[str, Tuple[str, str]] = {
     "shed_frac": ("either", "struct"),
     "shed_frac_p0": ("either", "struct"),
     "shed_frac_p2": ("either", "struct"),
+    # prefill/decode disaggregation (bench_disagg): deterministic
+    # handoff/migration ledgers — a drift in KV moved or handoff counts
+    # is a topology-semantics change — plus the throughput floor vs the
+    # co-located fleet and the decode-tail improvement
+    "handoffs": ("either", "struct"),
+    "kv_tokens_moved": ("either", "struct"),
+    "kv_bytes_moved": ("either", "struct"),
+    "migrations": ("either", "struct"),
+    "vs_colocated": ("lower", "exact"),
+    "decode_p99_ms": ("higher", "perf"),
     "trace_valid": ("flag", "flag"),
     "identical_reports": ("flag", "flag"),
     "acceptance": ("flag", "flag"),

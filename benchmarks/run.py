@@ -22,6 +22,7 @@ BENCHES = [
     "bench_paged",
     "bench_obs",
     "bench_faults",
+    "bench_disagg",
     "bench_tune",
     "roofline",
     "hillclimb",

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from typing import Optional, Tuple, Union
 
 from repro.core.endpoints import (Category, category_for_level,
@@ -329,6 +330,31 @@ Buckets = Union[None, str, Tuple[int, ...]]
 
 _EXECUTORS = ("auto", "continuous", "wave", "fleet")
 
+_ROLES_RE = re.compile(r"^\s*(\d+)\s*[Pp]\s*\+\s*(\d+)\s*[Dd]\s*$")
+
+
+def parse_roles(spec) -> Optional[Tuple[int, int]]:
+    """Parse a prefill/decode role split (DESIGN.md §17).
+
+    Accepts the ``"2P+2D"`` spelling (case-insensitive, whitespace
+    tolerated), a ``(n_prefill, n_decode)`` pair, or None (co-located —
+    the default topology).  -> ``(n_prefill, n_decode)`` or None."""
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        m = _ROLES_RE.match(spec)
+        if m is None:
+            raise ValueError(
+                f"roles spec {spec!r} must look like '2P+2D'")
+        split = (int(m.group(1)), int(m.group(2)))
+    else:
+        n_p, n_d = spec
+        split = (int(n_p), int(n_d))
+    if split[0] < 1 or split[1] < 1:
+        raise ValueError("a role split needs at least one prefill and "
+                         "one decode worker")
+    return split
+
 
 @dataclasses.dataclass(frozen=True)
 class EndpointPlan:
@@ -362,6 +388,10 @@ class EndpointPlan:
     adapt_budget: Optional[float] = None  # Hints.footprint_budget carried
     #                                       through so the live controller
     #                                       honors the same ceiling
+    # ----- prefill/decode disaggregation (DESIGN.md §17) -----------------
+    roles: Optional[str] = None       # e.g. "2P+2D"; None = co-located
+    #                                   (every worker prefills AND
+    #                                   decodes — the historical fleet)
 
     def __post_init__(self):
         if isinstance(self.prefill_buckets, list):
@@ -394,6 +424,16 @@ class EndpointPlan:
                              f"through the fleet")
         if self.executor == "fleet" and self.n_workers < 2:
             raise ValueError("the fleet executor needs n_workers >= 2")
+        split = parse_roles(self.roles)   # validates spelling + floors
+        if split is not None:
+            n_p, n_d = split
+            if n_p + n_d != self.n_workers:
+                raise ValueError(
+                    f"roles {n_p}P+{n_d}D need exactly {n_p + n_d} "
+                    f"workers, plan has {self.n_workers}")
+            if self.resolved_executor != "fleet":
+                raise ValueError("a disaggregated plan serves through "
+                                 "the fleet executor (n_workers >= 2)")
 
     # ----- construction --------------------------------------------------
     @classmethod
@@ -435,6 +475,12 @@ class EndpointPlan:
         if self.preset is not None:
             return Category(self.preset)
         return self.vector.category
+
+    @property
+    def role_split(self) -> Optional[Tuple[int, int]]:
+        """The parsed ``(n_prefill, n_decode)`` split, or None when the
+        plan is co-located."""
+        return parse_roles(self.roles)
 
     @property
     def paged(self) -> bool:
@@ -487,5 +533,5 @@ def as_plan(spec, **overrides) -> EndpointPlan:
 __all__ = [
     "RESOURCES", "PAGED_RESOURCES", "SharingVector", "Hints",
     "fit_budget", "resolve", "EndpointPlan", "PRESETS", "as_plan",
-    "Buckets",
+    "Buckets", "parse_roles",
 ]

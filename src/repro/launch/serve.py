@@ -35,8 +35,26 @@ from repro.obs import enabled_obs
 from repro.serve import connect
 from repro.serve.fabric import TRAFFIC_SHAPES, bursty_trace, phased_trace, \
     poisson_trace, session_trace
+from repro.serve.fabric.faults import _parse_time_ns
 from repro.serve.fabric.placement import POLICIES
 from repro.serve.recovery import RecoveryPolicy
+
+
+def parse_migrations(items):
+    """--migrate TIME:wSRC:wDST (repeatable) -> [(t_ns, src, dst)].
+    Times use the fault grammar's units ('600us', '1.2ms', bare ns)."""
+    out = []
+    for item in items:
+        try:
+            t, src, dst = item.split(":")
+            if not (src.startswith("w") and dst.startswith("w")):
+                raise ValueError("workers spell as wN")
+            out.append((_parse_time_ns(t), int(src[1:]), int(dst[1:])))
+        except ValueError as e:
+            raise ValueError(
+                f"--migrate wants 'TIME:wSRC:wDST' (e.g. '600us:w2:w3'); "
+                f"got {item!r}: {e}") from None
+    return out
 
 
 def make_trace(args):
@@ -114,6 +132,8 @@ def build_plan(args, ap) -> EndpointPlan:
                  adaptive=adaptive,
                  adapt_window_ns=getattr(args, "adapt_window",
                                          250.0) * 1e3)
+    if getattr(args, "roles", None):
+        knobs["roles"] = args.roles
     pages = getattr(args, "pages", 1) or 1
     page_size = getattr(args, "page_size", 0) or 0
     if pages < 1 or pages > 4:
@@ -233,6 +253,13 @@ def run_fleet(cfg, client, args) -> None:
           f"{'/'.join(f'{x * 100:.0f}%' for x in foot.values())}), "
           f"endpoint uuars={u['uuars'] * 100:.1f}% "
           f"memory={u['memory'] * 100:.1f}%")
+    if rep.roles is not None or rep.handoffs or rep.migrations:
+        topo = (f"{rep.roles[0]}P+{rep.roles[1]}D"
+                if rep.roles is not None else "co-located")
+        print(f"  disagg: {topo}, {rep.handoffs} KV handoffs "
+              f"({rep.kv_tokens_moved} tokens, "
+              f"{rep.kv_bytes_moved:,} bytes), "
+              f"{rep.migrations} live migrations")
     if rep.page_hwm_frac is not None:
         print(f"  pages: peak {rep.page_hwm_frac * 100:.1f}% of the "
               f"dedicated reservation, {rep.page_deferrals} deferrals")
@@ -376,6 +403,19 @@ def main(argv=None):
                     help="adaptation window in virtual microseconds "
                          "(fleet mode; the single engine converts it to "
                          "decode steps via the fabric cost model)")
+    ap.add_argument("--roles", default=None, metavar="SPEC",
+                    help="prefill/decode disaggregation (DESIGN.md §17): "
+                         "'2P+2D' splits the fleet into 2 prefill-only + "
+                         "2 decode-only workers (must sum to --workers); "
+                         "finished prefills hand their KV to a decode "
+                         "worker over the fabric")
+    ap.add_argument("--migrate", action="append", default=[],
+                    metavar="TIME:wSRC:wDST",
+                    help="decode→decode live migration (repeatable): at "
+                         "TIME (fault-grammar units, e.g. '600us') the "
+                         "source worker's live sessions move to the "
+                         "destination as KV handoffs, token streams "
+                         "bit-identical (fleet mode only)")
     ap.add_argument("--faults", default=None, metavar="SPEC",
                     help="chaos fabric (DESIGN.md §15): deterministic "
                          "fault plan, comma-separated "
@@ -430,6 +470,12 @@ def main(argv=None):
             and args.workers <= 1:
         ap.error("--faults and the recovery knobs need a fleet "
                  "(--workers > 1)")
+    if (args.roles or args.migrate) and args.workers <= 1:
+        ap.error("--roles and --migrate need a fleet (--workers > 1)")
+    try:
+        migrations = parse_migrations(args.migrate) or None
+    except ValueError as e:
+        ap.error(str(e))
     recovery = None
     if args.faults or any(k is not None for k in ft_knobs):
         kw = {}
@@ -444,7 +490,8 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     obs = enabled_obs() if (args.trace_out or args.metrics_out) else None
     client = connect(cfg, plan, seed=args.seed, obs=obs,
-                     faults=args.faults, recovery=recovery)
+                     faults=args.faults, recovery=recovery,
+                     migrations=migrations)
     if plan.n_workers > 1:
         run_fleet(cfg, client, args)
     else:

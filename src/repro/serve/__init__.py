@@ -7,17 +7,18 @@ point (DESIGN.md §11); `ServeEngine` / `ContinuousEngine` / the fabric
 
 from repro.core.adapt import Replanner, WindowStats
 from repro.core.plan import (EndpointPlan, Hints, PRESETS, SharingVector,
-                             as_plan, resolve)
+                             as_plan, parse_roles, resolve)
 from repro.serve.api import ServeClient, Stream, connect
-from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.engine import (ContinuousEngine, KVHandoff, Request,
+                                ServeEngine)
 from repro.serve.fabric.faults import FaultPlan, FaultSpec, parse_faults
 from repro.serve.recovery import LostWork, RecoveryManager, RecoveryPolicy
 from repro.serve.slots import SlotPool
 
 __all__ = [
     "ContinuousEngine", "EndpointPlan", "FaultPlan", "FaultSpec", "Hints",
-    "LostWork", "PRESETS", "RecoveryManager", "RecoveryPolicy",
-    "Replanner", "Request", "ServeClient", "ServeEngine", "SharingVector",
-    "SlotPool", "Stream", "WindowStats", "as_plan", "connect",
-    "parse_faults", "resolve",
+    "KVHandoff", "LostWork", "PRESETS", "RecoveryManager",
+    "RecoveryPolicy", "Replanner", "Request", "ServeClient", "ServeEngine",
+    "SharingVector", "SlotPool", "Stream", "WindowStats", "as_plan",
+    "connect", "parse_faults", "parse_roles", "resolve",
 ]

@@ -64,7 +64,7 @@ from repro.serve.recovery import RecoveryPolicy
 #: mean evicting in-flight requests, which the migration contract forbids.
 STRUCTURAL_FIELDS = ("n_workers", "n_slots", "max_len", "decode_horizon",
                      "prefill_buckets", "use_ragged_kernel", "executor",
-                     "page_size", "page_budget")
+                     "page_size", "page_budget", "roles")
 
 # fabric session keys for streams live above any plausible caller-supplied
 # session id, so a stream's affinity key can never alias a user session
@@ -126,7 +126,7 @@ class ServeClient:
                  obs: Optional[Observability] = None,
                  faults: Union[FaultPlan, str, None] = None,
                  recovery: Optional[RecoveryPolicy] = None,
-                 plan_repository=None):
+                 plan_repository=None, migrations=None):
         if plan.placement not in POLICIES:
             raise ValueError(f"unknown placement {plan.placement!r}; "
                              f"one of {sorted(POLICIES)}")
@@ -144,18 +144,24 @@ class ServeClient:
         #: every run's spans + metrics for --trace-out / --metrics-out
         self.obs = obs if obs is not None else NOOP_OBS
         self.executor = plan.resolved_executor
-        if (faults is not None or recovery is not None) \
-                and self.executor != "fleet":
+        if (faults is not None or recovery is not None
+                or migrations) and self.executor != "fleet":
             raise ValueError(
-                "fault injection / crash recovery live on the fleet "
-                "fabric (plan.n_workers > 1); this plan resolved to the "
-                f"{self.executor!r} executor")
+                "fault injection / crash recovery / live migration live "
+                "on the fleet fabric (plan.n_workers > 1); this plan "
+                f"resolved to the {self.executor!r} executor")
         #: chaos fabric (DESIGN.md §15): a FaultPlan (or its string
         #: grammar) injected into every run's router; ``recovery`` tunes
         #: detection/backoff/shedding.  Both None = today's fault-free
         #: event stream, bit-identical.
         self.faults = faults
         self.recovery = recovery
+        #: scheduled decode→decode live migrations (DESIGN.md §17):
+        #: (t_ns, src_worker, dst_worker) triples the router drains at
+        #: their virtual times on EVERY fleet run — the source worker's
+        #: live sessions leave as KV handoffs and resume on the
+        #: destination mid-stream, token streams bit-identical
+        self.migrations = list(migrations) if migrations else None
         self.results: Dict[int, List[int]] = {}
         #: exactly-once delivery cursor: tokens of ``results[rid]``
         #: already surfaced to the caller.  Completion replays (a retry
@@ -466,7 +472,8 @@ class ServeClient:
                         on_complete=on_complete, adapt=adapt,
                         adapt_window_ns=self.plan.adapt_window_ns,
                         obs=self.obs, faults=self.faults,
-                        recovery=self.recovery)
+                        recovery=self.recovery,
+                        migrations=self.migrations)
         self.report = router.run(trace)
         if adapt is not None:
             self.transitions.extend(self.report.transitions)
@@ -610,6 +617,7 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
             faults: Union[FaultPlan, str, None] = None,
             recovery: Optional[RecoveryPolicy] = None,
             plan_repository=None, use_repository: bool = True,
+            migrations=None,
             **overrides) -> ServeClient:
     """Connect a serving session: resolve ``plan`` (an ``EndpointPlan``,
     ``Hints``, ``SharingVector``, ``Category``/preset name, or None for
@@ -622,6 +630,14 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
     injects deterministic failures into every fleet run; ``recovery``
     (a ``serve.RecoveryPolicy``) tunes detection, retry backoff, and
     overload shedding — both need the fleet executor.
+
+    ``migrations`` schedules decode→decode live migrations on every
+    fleet run: ``(t_ns, src_worker, dst_worker)`` triples drained at
+    their virtual times — the source's live sessions leave as KV
+    handoffs and resume on the destination without dropping or
+    duplicating a token (DESIGN.md §17).  ``roles="2P+2D"`` (a plan
+    field / override) splits the fleet into prefill-only and
+    decode-only sub-fleets with the KV handed off after each prefill.
 
     ``plan_repository`` (DESIGN.md §16) attaches a tuned-plan store
     (``tune.PlanRepository``): ``Hints`` resolution consults its stored
@@ -639,7 +655,8 @@ def connect(cfg, plan: Union[EndpointPlan, Hints, SharingVector, str,
     if params is None:
         params = Model(cfg).init(jax.random.PRNGKey(seed))
     return ServeClient(cfg, params, resolved, obs=obs, faults=faults,
-                       recovery=recovery, plan_repository=plan_repository)
+                       recovery=recovery, plan_repository=plan_repository,
+                       migrations=migrations)
 
 
 # connect(..., adaptive=True) is the one-flag spelling of live

@@ -58,12 +58,37 @@ from repro.serve.slots import SlotPool, _coerce_level
 
 
 @dataclasses.dataclass
+class KVHandoff:
+    """One session's portable KV state (DESIGN.md §17) — everything a
+    decode worker needs to resume a stream some other worker started:
+    the batch-1 contiguous cache (None for virtual SimWorkers), the
+    next token to feed (decided, not yet decoded), the resident cache
+    position, the remaining token budget, and the tokens already
+    emitted.  ``kv_tokens``/``kv_bytes`` price the transfer on the
+    fabric (``FabricCosts.t_handoff_*``).  Greedy decoding is a pure
+    function of the context, so resuming from this state elsewhere is
+    bit-identical to never having moved."""
+
+    rid: int
+    cache: object                      # batch-1 contiguous cache | None
+    next_tok: int
+    pos: int
+    remaining: int
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    eos_id: int = -1
+    kv_tokens: int = 0
+    kv_bytes: int = 0
+
+
+@dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray                 # (len,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     output: Optional[list] = None      # filled by the engine
+    kv: Optional[KVHandoff] = None     # imported cache: admission merges
+    #                                    it instead of running a prefill
 
 
 class ServeEngine:
@@ -396,6 +421,18 @@ def _scatter_slots_paged(full, many, has, src, lengths, pt, max_len):
     return {"stack": stack, "idx": idx, "pt": pt.astype(jnp.int32)}
 
 
+def _cache_bytes(cache, tokens: int, max_len: int) -> int:
+    """Bytes of KV actually resident in a batch-1 cache holding
+    ``tokens`` of its ``max_len`` capacity — the size-proportional
+    payload a handoff moves (the allocation is max_len-shaped; only the
+    occupied prefix travels)."""
+    total = 0
+    for group in ("prefix", "body"):
+        for leaf in jax.tree.leaves(cache["stack"][group]):
+            total += leaf.size * leaf.dtype.itemsize
+    return int(total * tokens / max(1, max_len))
+
+
 def auto_page_size(max_len: int, target: int = 0) -> int:
     """The default KV page size when the plan says paged but not how
     big: the largest divisor of ``max_len`` not exceeding ``target``
@@ -697,6 +734,148 @@ class ContinuousEngine:
         self.stats["prefilled_requests"] += len(batch)
         return cache
 
+    # ----- prefill/decode disaggregation (DESIGN.md §17) -----------------
+    def prefill_only(self, req: Request) -> KVHandoff:
+        """Prefill-role service: run the batch-1 exact-length prefill
+        and return the session's portable KV payload instead of binding
+        a decode slot — the prefill worker's whole contribution.  Exact-
+        length batch-1 prefill is bit-identical to the bucketed
+        admission path (padding is bit-invisible under causal
+        attention), so decoding this payload elsewhere reproduces the
+        co-located token stream exactly."""
+        req.output = []
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit max_len="
+                f"{self.max_len}")
+        prompt = jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)
+        one = self.model.init_cache(1, self.max_len)
+        logits, one = self._prefill(self.params, {"tokens": prompt}, one)
+        first = int(jnp.argmax(logits, -1)[0])
+        self.stats["prefills"] += 1
+        self.stats["prefilled_requests"] += 1
+        self.stats["host_syncs"] += 1
+        pos = len(req.prompt)
+        return KVHandoff(
+            rid=req.rid, cache=one, next_tok=first, pos=pos,
+            remaining=max(1, req.max_new_tokens), emitted=[],
+            eos_id=-1 if req.eos_id is None else req.eos_id,
+            kv_tokens=pos, kv_bytes=_cache_bytes(one, pos, self.max_len))
+
+    def _admit_handoff(self, cache, slot: int, req: Request):
+        """Land an imported KV payload in ``slot``: the session's cache
+        merges exactly where a prefill's would have, then the slot
+        resumes at the imported position / budget / next token.  No
+        forward pass runs here — that is the whole point."""
+        h = req.kv
+        if self.page_pool is not None:
+            cache = self._steps.merge_paged(
+                cache, h.cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(self._pt[slot]))
+        else:
+            cache = self._merge(cache, h.cache,
+                                jnp.asarray(slot, jnp.int32))
+        req.output = list(h.emitted)
+        self._bind(slot, req, h.next_tok)
+        # _bind assumed a fresh prefill; the payload is authoritative
+        # for where the session actually stands
+        self._pos[slot] = h.pos
+        self._remaining[slot] = h.remaining
+        if self._dev_state is not None:
+            s = self._dev_state
+            self._dev_state = {
+                "tok": s["tok"].at[slot].set(h.next_tok),
+                "remaining": s["remaining"].at[slot].set(h.remaining),
+                "finished": s["finished"].at[slot].set(False),
+                "eos": s["eos"].at[slot].set(self._eos_id[slot]),
+                "has_eos": s["has_eos"].at[slot].set(
+                    bool(self._has_eos[slot])),
+            }
+        return cache
+
+    def export_session(self, slot: int) -> KVHandoff:
+        """Strip the live session in ``slot`` into a portable KV payload
+        (live decode→decode migration): its cache rows leave as a
+        batch-1 CONTIGUOUS cache — sliced out of the slot cache, or
+        gathered page-by-page on the paged layout — and the slot frees
+        exactly as an evacuation would (pages returned, device rows
+        drained, nothing retired)."""
+        req = self._slot_req[slot]
+        assert req is not None, f"slot {slot} holds no session"
+        if self._dev_state is not None:
+            # fused mode: tok/remaining are device-resident; this export
+            # is the one host sync the migration costs
+            tok = int(jax.device_get(self._dev_state["tok"][slot]))
+            rem = int(jax.device_get(self._dev_state["remaining"][slot]))
+            self.stats["host_syncs"] += 1
+        else:
+            tok = int(self._next_tok[slot])
+            rem = int(self._remaining[slot])
+        pos = int(self._pos[slot])
+        if self.page_pool is not None:
+            # gather the slot's pages into contiguous order; sentinel
+            # entries clamp to the last physical page — garbage rows,
+            # but they sit beyond ``pos`` where attention never reads
+            ids = jnp.asarray(
+                np.minimum(self._pt[slot],
+                           self.page_pool.total_pages - 1), jnp.int32)
+
+            def gather(axis):
+                def f(leaf):
+                    pages = jnp.take(leaf, ids, axis=axis)
+                    pre = pages.shape[:axis]
+                    tail = pages.shape[axis + 2:]
+                    return pages.reshape(pre + (1, self.max_len) + tail)
+                return f
+
+            stack = {
+                "prefix": [jax.tree.map(gather(0), f)
+                           for f in self._cache["stack"]["prefix"]],
+                "body": [jax.tree.map(gather(1), f)
+                         for f in self._cache["stack"]["body"]],
+            }
+        else:
+            def take(axis):
+                return lambda leaf: jax.lax.dynamic_slice_in_dim(
+                    leaf, slot, 1, axis=axis)
+
+            stack = {
+                "prefix": [jax.tree.map(take(0), f)
+                           for f in self._cache["stack"]["prefix"]],
+                "body": [jax.tree.map(take(1), f)
+                         for f in self._cache["stack"]["body"]],
+            }
+        # scalar idx, matching ``init_cache(1, …)`` (only per_slot caches
+        # carry a vector idx) — ``_scatter_slot`` sets it into one row
+        one = {"stack": stack, "idx": self._cache["idx"][slot]}
+        # free the slot like an evacuation: no retirement, no latency
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        if self.page_pool is not None:
+            self.page_pool.free(slot)
+            self._pt[slot] = sentinel(self.page_pool.total_pages)
+            self._cache["pt"] = self._cache["pt"].at[slot].set(
+                jnp.asarray(self._pt[slot]))
+        if self._dev_state is not None:
+            self._dev_state = {
+                **self._dev_state,
+                "finished": self._dev_state["finished"].at[slot].set(True),
+                "remaining": self._dev_state["remaining"].at[slot].set(0),
+            }
+        return KVHandoff(
+            rid=req.rid, cache=one, next_tok=tok, pos=pos, remaining=rem,
+            emitted=list(req.output or []),
+            eos_id=-1 if req.eos_id is None else req.eos_id,
+            kv_tokens=pos, kv_bytes=_cache_bytes(one, pos, self.max_len))
+
+    def export_sessions(self) -> List[KVHandoff]:
+        """Every live slot leaves as a KV payload (slot order — the
+        deterministic migration drain); the engine's own admission
+        queue stays put: it holds no KV yet."""
+        return [self.export_session(slot)
+                for slot, req in enumerate(self._slot_req)
+                if req is not None]
+
     def publish_metrics(self, registry, worker: int = 0) -> None:
         """Publish this engine's absolute counters into an
         ``obs.MetricsRegistry`` (DESIGN.md §14) under a ``worker`` label.
@@ -938,8 +1117,11 @@ class ContinuousEngine:
                 # A dry pool DEFERS in FIFO order: the head request waits
                 # rather than being overtaken (pool state untouched).
                 req = self.queue[0]
-                span = min(len(req.prompt) + req.max_new_tokens,
-                           self.max_len)
+                # a KV import's span is keyed by the RESIDENT cache
+                # (possibly mid-decode), not the raw prompt
+                base = (req.kv.pos if req.kv is not None
+                        else len(req.prompt))
+                span = min(base + req.max_new_tokens, self.max_len)
                 need = max(1, -(-span // self.page_size))
                 if self.page_pool.alloc(slot, need) is None:
                     break
@@ -950,6 +1132,10 @@ class ContinuousEngine:
             self.stats["page_hwm"] = self.page_pool.hwm
         if not batch:
             return 0
+        kv_batch = [(s, r) for s, r in batch if r.kv is not None]
+        batch = [(s, r) for s, r in batch if r.kv is None]
+        for slot, req in kv_batch:      # cache merge, no forward pass
+            self._cache = self._admit_handoff(self._cache, slot, req)
         if self.prefill_buckets:
             cap = self.prefill_buckets[-1]
             fit = [(s, r) for s, r in batch if len(r.prompt) <= cap]
@@ -961,7 +1147,7 @@ class ContinuousEngine:
         else:
             for slot, req in batch:
                 self._cache = self._admit(self._cache, slot, req)
-        return len(batch)
+        return len(batch) + len(kv_batch)
 
     def step(self) -> List[Request]:
         """Decode ``decode_horizon`` steps over every live slot; ->

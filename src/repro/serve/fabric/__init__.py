@@ -9,7 +9,8 @@ from repro.serve.fabric.faults import (FaultInjector, FaultPlan,
                                        canonical_crash_plan, parse_faults)
 from repro.serve.fabric.placement import POLICIES, make_policy
 from repro.serve.fabric.router import (Completion, EngineWorker,
-                                       FabricCosts, FleetReport, Router,
+                                       FabricCosts, FleetReport,
+                                       RoleDispatchPlan, Router,
                                        SimWorker, build_sim_fleet)
 from repro.serve.fabric.traffic import (Arrival, Phase, TRAFFIC_SHAPES,
                                         bursty_trace,
@@ -22,7 +23,8 @@ from repro.serve.fabric.traffic import (Arrival, Phase, TRAFFIC_SHAPES,
 __all__ = [
     "Arrival", "Completion", "DispatchChannel", "EngineWorker",
     "FabricCosts", "FaultInjector", "FaultPlan", "FaultSpec",
-    "FleetReport", "POLICIES", "Phase", "Router", "SimWorker",
+    "FleetReport", "POLICIES", "Phase", "RoleDispatchPlan", "Router",
+    "SimWorker",
     "TRAFFIC_SHAPES", "build_sim_fleet", "bursty_trace",
     "canonical_bursty_trace", "canonical_chaos_plan",
     "canonical_crash_plan", "canonical_faulted_trace",

@@ -50,7 +50,8 @@ from repro.obs.metrics import MetricsRegistry, quantile
 from repro.obs.trace import (NOOP_OBS, Observability, PID_FLEET,
                              PID_REQUESTS, PID_RESOURCES, TID_CHANNEL0,
                              TID_PAGES0, TID_ROUTER, TID_WORKER0)
-from repro.serve.engine import ContinuousEngine, Request
+from repro.core.plan import parse_roles
+from repro.serve.engine import ContinuousEngine, KVHandoff, Request
 from repro.serve.fabric.channels import DispatchChannel
 from repro.serve.fabric.faults import (FaultInjector, FaultPlan,
                                        parse_faults)
@@ -78,6 +79,11 @@ class FabricCosts:
     t_admit_per_token_ns: float = 300.0   # prefill, per prompt token
     t_step_base_ns: float = 30_000.0      # one fleet-worker decode step
     t_step_per_slot_ns: float = 6_000.0   # marginal cost per live slot
+    # KV handoff (prefill/decode disaggregation, DESIGN.md §17): moving
+    # a session's cache between workers costs a base latch plus a
+    # per-resident-token transfer — size-proportional, like the bytes
+    t_handoff_base_ns: float = 2_000.0
+    t_handoff_per_token_ns: float = 150.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +103,12 @@ class Completion:
 class _Live:
     arrival: Arrival
     remaining: int
+
+
+#: nominal KV bytes per resident token for VIRTUAL workers — SimWorker
+#: has no real cache, but the handoff ledger (``fleet.kv_bytes_moved``)
+#: must stay deterministic and size-proportional for the bench gates
+SIM_KV_BYTES_PER_TOKEN = 1024
 
 
 class SimWorker:
@@ -129,7 +141,11 @@ class SimWorker:
         self.max_len = int(max_len)
         self.page_size = int(page_size)
         self.page_pool: Optional[PagePool] = None
-        self._waiting: List[Arrival] = []
+        #: FIFO deferral line: (arrival, remaining, pos) — remaining/pos
+        #: are None for plain admissions, set for KV-handoff admissions
+        #: (whose page span is keyed by the RESIDENT cache, not the
+        #: prompt)
+        self._waiting: List[tuple] = []
         if self.page_size > 0:
             assert self.max_len % self.page_size == 0, \
                 "page_size must divide max_len"
@@ -179,18 +195,28 @@ class SimWorker:
                    self.max_len)
         return max(1, -(-span // self.page_size))
 
-    def _try_place(self, arrival: Arrival) -> bool:
+    def _try_place(self, arrival: Arrival, remaining=None,
+                   pos=None) -> bool:
         """Bind ``arrival`` to an admissible slot, reserving its pages
-        first when the pool is paged; False defers (nothing granted)."""
+        first when the pool is paged; False defers (nothing granted).
+        ``remaining``/``pos`` override the decode budget and resident
+        token count for KV-handoff admissions (the pages cover the
+        imported cache, not a fresh prefill)."""
         occupied = [s is not None for s in self._slots]
         slots = self.pool.admissible(occupied, queue_len=1)
         if not slots:
             return False
-        if self.page_pool is not None and self.page_pool.alloc(
-                slots[0], self._page_need(arrival)) is None:
-            return False
-        self._slots[slots[0]] = _Live(arrival,
-                                      max(1, arrival.max_new_tokens))
+        if self.page_pool is not None:
+            if pos is None:
+                need = self._page_need(arrival)
+            else:
+                span = min(pos + remaining, self.max_len)
+                need = max(1, -(-span // self.page_size))
+            if self.page_pool.alloc(slots[0], need) is None:
+                return False
+        rem = (remaining if remaining is not None
+               else max(1, arrival.max_new_tokens))
+        self._slots[slots[0]] = _Live(arrival, rem)
         self.stats["admitted"] += 1
         return True
 
@@ -199,9 +225,66 @@ class SimWorker:
             ok = self._try_place(arrival)
             assert ok, "admit() called with no admissible slot"
         elif not self._try_place(arrival):
-            self._waiting.append(arrival)     # dry pool: FIFO defer
+            self._waiting.append((arrival, None, None))  # FIFO defer
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+
+    # ----- prefill/decode disaggregation (DESIGN.md §17) -----------------
+    def admit_prefill(self, arrival: Arrival, t_ns: float):
+        """Prefill-role admission: the virtual admit cost IS the forward
+        pass; no decode slot is bound (prefill workers never decode) —
+        -> (cost_ns, KV payload bound for the decode sub-fleet)."""
+        self.stats["admitted"] += 1
+        cost = (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+        h = KVHandoff(rid=arrival.rid, cache=None, next_tok=-1,
+                      pos=arrival.prompt_len,
+                      remaining=max(1, arrival.max_new_tokens),
+                      emitted=[], kv_tokens=arrival.prompt_len,
+                      kv_bytes=arrival.prompt_len * SIM_KV_BYTES_PER_TOKEN)
+        return cost, h
+
+    def admit_retry_prefill(self, arrival: Arrival, orig: Arrival,
+                            prefix, t_ns: float):
+        """Crash-recovery redo of a prefill: a virtual worker has no
+        real prompt, so the inflated ``arrival`` (prompt + emitted
+        prefix, shrunken budget) carries everything the cost model and
+        the payload need."""
+        return self.admit_prefill(arrival, t_ns)
+
+    def admit_handoff(self, arrival: Arrival, h: KVHandoff,
+                      t_ns: float) -> float:
+        """Decode-side landing of a KV payload: bind a slot with the
+        handoff's remaining budget (pages sized by the resident cache).
+        The prefill already happened elsewhere — only the slot
+        bookkeeping cost is charged."""
+        rem = max(1, h.remaining)
+        if self.page_pool is None:
+            ok = self._try_place(arrival, rem, h.pos)
+            assert ok, "admit_handoff() called with no admissible slot"
+        elif not self._try_place(arrival, rem, h.pos):
+            self._waiting.append((arrival, rem, h.pos))
+        return self.costs.t_admit_base_ns
+
+    def export_sessions(self) -> List[KVHandoff]:
+        """Live decode→decode migration: strip every live slot into a
+        KV payload (pages freed here, re-keyed at the destination).
+        The page-deferred waiting line stays put — it holds no KV yet."""
+        out = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            a = s.arrival
+            done = max(1, a.max_new_tokens) - s.remaining
+            pos = min(a.prompt_len + done, self.max_len)
+            out.append(KVHandoff(
+                rid=a.rid, cache=None, next_tok=-1, pos=pos,
+                remaining=s.remaining, emitted=[], kv_tokens=pos,
+                kv_bytes=pos * SIM_KV_BYTES_PER_TOKEN))
+            self._slots[i] = None
+            if self.page_pool is not None:
+                self.page_pool.free(i)
+        return out
 
     def kill(self) -> List[LostWork]:
         """Fail-stop death (chaos fabric, DESIGN.md §15): every live
@@ -218,8 +301,10 @@ class SimWorker:
             self._slots[i] = None
             if self.page_pool is not None:
                 self.page_pool.free(i)
-        for a in self._waiting:
-            lost.append(LostWork(rid=a.rid, emitted=0))
+        for a, rem, _pos in self._waiting:
+            emitted = (0 if rem is None
+                       else max(1, a.max_new_tokens) - rem)
+            lost.append(LostWork(rid=a.rid, emitted=emitted))
         self._waiting.clear()
         return lost
 
@@ -228,7 +313,7 @@ class SimWorker:
         if self._waiting:
             # retry the deferred line in FIFO order; stop at the first
             # request that still cannot fit (no overtaking)
-            while self._waiting and self._try_place(self._waiting[0]):
+            while self._waiting and self._try_place(*self._waiting[0]):
                 self._waiting.pop(0)
         if self.page_pool is not None:
             self.stats["page_deferrals"] = self.page_pool.deferrals
@@ -324,41 +409,84 @@ class EngineWorker:
         return max(0, len(self.engine.free_slots())
                    - len(self.engine.queue))
 
-    def admit(self, arrival: Arrival, t_ns: float) -> float:
+    def _base_request(self, arrival: Arrival) -> Request:
         if self.request_fn is not None:
-            self.engine.submit(self.request_fn(arrival))
-        else:
-            self.engine.submit(Request(
-                rid=arrival.rid, prompt=self.prompt_fn(arrival),
-                max_new_tokens=arrival.max_new_tokens))
+            return self.request_fn(arrival)
+        return Request(rid=arrival.rid, prompt=self.prompt_fn(arrival),
+                       max_new_tokens=arrival.max_new_tokens)
+
+    def admit(self, arrival: Arrival, t_ns: float) -> float:
+        self.engine.submit(self._base_request(arrival))
         self.stats["admitted"] += 1
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
 
-    def admit_retry(self, arrival: Arrival, orig: Arrival,
-                    prefix: Optional[List[int]], t_ns: float) -> float:
-        """Re-admit a crash-lost request: the ORIGINAL prompt (rebuilt
-        from ``orig`` — ``arrival`` carries the inflated prompt_len for
-        cost accounting only) extended by the already-emitted ``prefix``
-        tokens, with the shrunken ``max_new_tokens`` budget.  Greedy
-        decoding is a pure function of the context, so the continuation
-        is bit-identical to what the dead worker would have produced."""
-        if self.request_fn is not None:
-            base = self.request_fn(orig)
-        else:
-            base = Request(rid=orig.rid, prompt=self.prompt_fn(orig),
-                           max_new_tokens=orig.max_new_tokens)
+    def _retry_request(self, arrival: Arrival, orig: Arrival,
+                       prefix: Optional[List[int]]) -> Request:
+        """The re-admission Request of a crash-lost rid: the ORIGINAL
+        prompt (rebuilt from ``orig`` — ``arrival`` carries the inflated
+        prompt_len for cost accounting only) extended by the already-
+        emitted ``prefix`` tokens, with the shrunken budget."""
+        base = self._base_request(orig)
         prompt = np.asarray(base.prompt, np.int32)
         if prefix:
             prompt = np.concatenate(
                 [prompt, np.asarray(prefix, np.int32)])
-        self.engine.submit(dataclasses.replace(
-            base, prompt=prompt,
-            max_new_tokens=arrival.max_new_tokens))
+        return dataclasses.replace(
+            base, prompt=prompt, max_new_tokens=arrival.max_new_tokens)
+
+    def admit_retry(self, arrival: Arrival, orig: Arrival,
+                    prefix: Optional[List[int]], t_ns: float) -> float:
+        """Re-admit a crash-lost request.  Greedy decoding is a pure
+        function of the context, so the continuation is bit-identical to
+        what the dead worker would have produced."""
+        self.engine.submit(self._retry_request(arrival, orig, prefix))
         self.stats["admitted"] += 1
         # cost covers the full re-prefill (prompt + prefix)
         return (self.costs.t_admit_base_ns
                 + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+
+    # ----- prefill/decode disaggregation (DESIGN.md §17) -----------------
+    def admit_prefill(self, arrival: Arrival, t_ns: float):
+        """Prefill-role admission: batch-1 exact-length prefill NOW (the
+        virtual admit cost covers the forward pass) — -> (cost_ns, the
+        session's KV payload).  Exact-length batch-1 prefill is bit-
+        identical to the co-located admission path, so the decode
+        continuation elsewhere reproduces the co-located stream."""
+        h = self.engine.prefill_only(self._base_request(arrival))
+        self.stats["admitted"] += 1
+        cost = (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+        return cost, h
+
+    def admit_retry_prefill(self, arrival: Arrival, orig: Arrival,
+                            prefix: Optional[List[int]], t_ns: float):
+        """Crash-recovery redo of a prefill: original prompt + emitted
+        prefix, shrunken budget (the splice layer re-attaches the prefix
+        at completion, exactly as for co-located retries)."""
+        h = self.engine.prefill_only(
+            self._retry_request(arrival, orig, prefix))
+        self.stats["admitted"] += 1
+        cost = (self.costs.t_admit_base_ns
+                + arrival.prompt_len * self.costs.t_admit_per_token_ns)
+        return cost, h
+
+    def admit_handoff(self, arrival: Arrival, h: KVHandoff,
+                      t_ns: float) -> float:
+        """Decode-side import: the payload rides the engine's normal
+        admission queue (page reservation included) and is installed by
+        cache merge instead of a prefill."""
+        base = self._base_request(arrival)
+        self.engine.submit(dataclasses.replace(
+            base, max_new_tokens=max(1, h.remaining), kv=h))
+        self.stats["admitted"] += 1
+        return self.costs.t_admit_base_ns
+
+    def export_sessions(self) -> List[KVHandoff]:
+        """Live decode→decode migration: every live slot leaves as a KV
+        payload (the engine frees the slot and its pages); the engine's
+        own admission queue stays put — it holds no KV yet."""
+        return self.engine.export_sessions()
 
     def kill(self) -> List[LostWork]:
         """Fail-stop death: evacuate the wrapped engine (pages freed,
@@ -402,6 +530,65 @@ class EngineWorker:
 # ---------------------------------------------------------------------------
 # Router
 # ---------------------------------------------------------------------------
+
+class RoleDispatchPlan:
+    """Dispatch topology of a DISAGGREGATED fleet (DESIGN.md §17):
+    prefill workers ``[0, n_prefill)`` and decode workers
+    ``[n_prefill, n)`` each get their own ``DispatchPlan`` at the same
+    sharing level, so neither role's queue group ever mixes with the
+    other's — prefill workers never decode, decode workers never see a
+    raw prompt.  Global queue ids concatenate prefill queues first."""
+
+    def __init__(self, level, n_prefill: int, n_decode: int):
+        self.prefill = DispatchPlan(level, n_prefill)
+        self.decode = DispatchPlan(level, n_decode)
+        self.n_prefill = n_prefill
+        self.n_decode = n_decode
+        self.n_workers = n_prefill + n_decode
+
+    @property
+    def level(self):
+        return self.prefill.level
+
+    @property
+    def category(self) -> Category:
+        return self.prefill.category
+
+    @property
+    def n_queues(self) -> int:
+        return self.prefill.n_queues + self.decode.n_queues
+
+    @property
+    def prefill_queues(self) -> List[int]:
+        return list(range(self.prefill.n_queues))
+
+    @property
+    def decode_queues(self) -> List[int]:
+        return list(range(self.prefill.n_queues, self.n_queues))
+
+    def role_of(self, worker: int) -> str:
+        return "prefill" if worker < self.n_prefill else "decode"
+
+    def queue_of(self, worker: int) -> int:
+        if worker < self.n_prefill:
+            return self.prefill.queue_of(worker)
+        return self.prefill.n_queues + self.decode.queue_of(
+            worker - self.n_prefill)
+
+    def workers_of(self, queue: int) -> List[int]:
+        if queue < self.prefill.n_queues:
+            return list(self.prefill.workers_of(queue))
+        return [self.n_prefill + w for w in self.decode.workers_of(
+            queue - self.prefill.n_queues)]
+
+    def endpoint_usage(self) -> dict:
+        """Worker-weighted mean of the two sub-fleets' Table-1 usage."""
+        pu = self.prefill.endpoint_usage()
+        du = self.decode.endpoint_usage()
+        n = self.n_workers
+        return {k: (pu[k] * self.n_prefill + du[k] * self.n_decode) / n
+                for k in pu}
+
 
 @dataclasses.dataclass
 class FleetReport:
@@ -449,6 +636,12 @@ class FleetReport:
     recovery_latency_ns: List[float] = dataclasses.field(
         default_factory=list)
     duplicate_completions: int = 0            # must stay 0 (exactly-once)
+    # ----- disaggregation (DESIGN.md §17; zero on co-located fleets) ----
+    roles: Optional[tuple] = None             # (n_prefill, n_decode)
+    handoffs: int = 0                         # KV payloads moved
+    kv_tokens_moved: int = 0                  # resident tokens shipped
+    kv_bytes_moved: int = 0                   # cache bytes shipped
+    migrations: int = 0                       # decode→decode migrate events
 
     @property
     def n_completed(self) -> int:
@@ -499,7 +692,9 @@ class Router:
                  adapt_window_ns: float = 250_000.0,
                  obs: Optional[Observability] = None,
                  faults=None,
-                 recovery: Optional[RecoveryPolicy] = None):
+                 recovery: Optional[RecoveryPolicy] = None,
+                 roles=None,
+                 migrations: Optional[List] = None):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
         # ----- observability (DESIGN.md §14) -----------------------------
@@ -515,7 +710,22 @@ class Router:
         if adapt is not None and adapt_window_ns <= 0:
             raise ValueError("adapt_window_ns must be positive")
         if isinstance(sharing, EndpointPlan):
+            if roles is None:
+                roles = sharing.role_split
             sharing = sharing.vector
+        # ----- prefill/decode disaggregation (DESIGN.md §17) -------------
+        # ``roles`` splits the fleet into prefill workers [0, nP) and
+        # decode workers [nP, n): arrivals route to prefill channels
+        # only, finished prefills travel to a decode channel as a
+        # ``handoff`` event carrying their KV.  None = co-located
+        # (every worker does both — the byte-identical historical path).
+        self.roles = parse_roles(roles)
+        if self.roles is not None:
+            n_p, n_d = self.roles
+            if n_p < 1 or n_d < 1 or n_p + n_d != len(workers):
+                raise ValueError(
+                    f"roles {n_p}P+{n_d}D need exactly "
+                    f"{n_p + n_d} workers, fleet has {len(workers)}")
         if isinstance(sharing, SharingVector):
             self.vector = sharing
             plan_key = sharing.channels
@@ -534,12 +744,29 @@ class Router:
         self.workers = workers
         self.costs = costs
         self.on_complete = on_complete
-        self.plan = DispatchPlan(plan_key, len(workers))
+        self.plan = self._build_plan(plan_key, len(workers))
         self._chan_epoch = 0           # bumps per channel-plan migration
         self.channels = [DispatchChannel(q, self.plan.workers_of(q),
                                          recorder=self._rec)
                          for q in range(self.plan.n_queues)]
         self.policy: PlacementPolicy = make_policy(placement)
+        # decode-side placement gets its own policy instance so e.g. a
+        # round-robin rotation over prefill channels never perturbs the
+        # rotation over decode channels (and session pins stay per-role)
+        self._decode_policy: Optional[PlacementPolicy] = (
+            make_policy(placement) if self.roles is not None else None)
+        # in-flight + queued KV payloads: rid -> (KVHandoff, span key)
+        self._handoff_payload: Dict[int, tuple] = {}
+        self._handoff_seq: Dict[int, int] = {}
+        self._handoffs = 0
+        self._kv_tokens_moved = 0
+        self._kv_bytes_moved = 0
+        self._migrations = 0
+        #: scheduled decode→decode live migrations: (t_ns, src, dst)
+        self.migrations: List = []
+        for t_mig, src, dst in (migrations or []):
+            self._check_migration(src, dst)
+            self.migrations.append((float(t_mig), int(src), int(dst)))
         # ----- online adaptation (DESIGN.md §12) -------------------------
         if adapt is not None:
             if self.vector is None:
@@ -598,11 +825,32 @@ class Router:
                 faults.validate(len(workers), self.plan.n_queues))
         self._ft: Optional[RecoveryManager] = None
         if self.injector is not None or recovery is not None:
-            self._ft = RecoveryManager(recovery or RecoveryPolicy(),
-                                       len(workers))
+            self._ft = RecoveryManager(
+                recovery or RecoveryPolicy(), len(workers),
+                critical=(range(self.roles[0])
+                          if self.roles is not None else None))
         #: worker -> LostWork captured at death, pending detection
         self._lost: Dict[int, List[LostWork]] = {}
         self._completed_rids: set = set()      # exactly-once guard (FT)
+
+    # ----- topology -------------------------------------------------------
+    def _build_plan(self, key, n: int):
+        """The dispatch topology for sharing-level ``key``: per-role
+        sub-plans under disaggregation, the flat plan otherwise."""
+        if self.roles is not None:
+            return RoleDispatchPlan(key, *self.roles)
+        return DispatchPlan(key, n)
+
+    def _check_migration(self, src: int, dst: int) -> None:
+        n = len(self.workers)
+        if not (0 <= src < n and 0 <= dst < n) or src == dst:
+            raise ValueError(f"bad migration {src}->{dst} "
+                             f"on a {n}-worker fleet")
+        if self.roles is not None and (src < self.roles[0]
+                                       or dst < self.roles[0]):
+            raise ValueError(
+                f"migration {src}->{dst} must stay inside the decode "
+                f"sub-fleet [{self.roles[0]}, {n})")
 
     # ----- event plumbing -------------------------------------------------
     def _push(self, t: float, kind: str, data) -> None:
@@ -629,6 +877,13 @@ class Router:
         base = f"{rid}q{self._chan_epoch}"
         return base if a == 0 else f"{base}a{a}"
 
+    def _queue_span_key(self, rid: int) -> str:
+        """The open queue span's key for ``rid``: handoff placements
+        carry their own key (suffixed by the handoff sequence number so
+        a session migrated repeatedly never collides)."""
+        entry = self._handoff_payload.get(rid)
+        return entry[1] if entry is not None else self._qkey(rid)
+
     def _eligible_channels(self) -> Optional[List[int]]:
         """FT placement fence: channels with at least one worker NOT
         declared dead; among those, prefer channels with a
@@ -647,16 +902,49 @@ class Router:
                        for w in self.channels[q].workers)]
         return good or live
 
+    def _channel_load(self, c: DispatchChannel) -> float:
+        """Aggregate in-flight load of a channel's worker group.  Fenced
+        (dead) members are excluded and the survivors' load is scaled
+        back up to the full group size, so a half-dead group reads as
+        the reduced-capacity channel it is (bugfix: the raw sum let
+        ``LeastLoaded`` treat a group that lost a member as having shed
+        load, steering arrivals at its lone survivor).  Fault-free
+        fleets take the exact integer sum — golden-stable."""
+        ft = self._ft
+        members = c.workers
+        if ft is None or not any(ft.fenced(w) for w in members):
+            return sum(self.workers[w].n_active for w in members)
+        live = [w for w in members if not ft.fenced(w)]
+        if not live:
+            return sum(self.workers[w].n_active for w in members)
+        return (sum(self.workers[w].n_active for w in live)
+                * len(members) / len(live))
+
     def _place(self, t: float, arr: Arrival) -> None:
         """Put one arrival onto a channel via the placement policy and
         wake that channel's workers — shared by fresh arrivals, the
         re-placement of queued work after a channel-plan migration, and
-        crash-recovery retries."""
+        crash-recovery retries.  Disaggregated fleets restrict fresh
+        prompts to the PREFILL channels."""
+        if self.roles is not None and self._ft is not None \
+                and all(self._ft.is_detected(w)
+                        for w in range(self.roles[0])):
+            # nowhere left to prefill: re-prefill on a survivor is
+            # impossible, the request fails here instead of stranding
+            # on a drained channel
+            self._fail_request(t, arr.rid, "no_prefill_workers")
+            return
         depths = [len(c) for c in self.channels]
-        loads = [sum(self.workers[w].n_active for w in c.workers)
-                 for c in self.channels]
-        qid = self.policy.choose(arr, depths, loads)
+        loads = [self._channel_load(c) for c in self.channels]
         eligible = self._eligible_channels()
+        if self.roles is not None:
+            pool = self.plan.prefill_queues
+            if eligible is not None:
+                live = set(eligible)
+                eligible = [q for q in pool if q in live] or pool
+            else:
+                eligible = pool
+        qid = self.policy.choose(arr, depths, loads, eligible)
         if eligible is not None and qid not in eligible:
             # deterministic remap off fenced/straggling channels; works
             # for ANY policy (round-robin never sees queue state)
@@ -717,6 +1005,9 @@ class Router:
         t = max(t, self._clock[w])
         worker = self.workers[w]
         chan = self.channels[self.plan.queue_of(w)]
+        if self.roles is not None and self.plan.role_of(w) == "prefill":
+            self._prefill_wake(t, w, worker, chan)
+            return
         rec, tracing = self._rec, self._rec.enabled
         if tracing:
             # instant-event probes: page deferrals and jit compiles show
@@ -729,11 +1020,16 @@ class Router:
             arr, t = chan.pop(t, self.costs.t_dequeue_ns)
             if arr is None:       # a sibling drained it first
                 break
+            entry = self._handoff_payload.pop(arr.rid, None)
             if tracing:
-                rec.end(PID_REQUESTS, "queue", self._qkey(arr.rid), t,
-                        cat="queue")
+                rec.end(PID_REQUESTS, "queue",
+                        entry[1] if entry is not None
+                        else self._qkey(arr.rid), t, cat="queue")
             t0 = t
-            if ft is not None and ft.attempts.get(arr.rid, 0) > 0 \
+            if entry is not None:
+                # a KV payload landing: install the cache, no prefill
+                t += worker.admit_handoff(arr, entry[0], t)
+            elif ft is not None and ft.attempts.get(arr.rid, 0) > 0 \
                     and hasattr(worker, "admit_retry"):
                 # crash-recovery re-admission: prompt + emitted prefix
                 t += worker.admit_retry(arr, self._arrivals[arr.rid],
@@ -780,6 +1076,155 @@ class Router:
             self._wake(w, t_end)      # keep stepping while slots are live
         else:
             self._clock[w] = t        # idle: zero pending events
+
+    # ----- prefill/decode disaggregation (DESIGN.md §17) ------------------
+    def _prefill_wake(self, t: float, w: int, worker, chan) -> None:
+        """Prefill-role wake: pop ONE arrival, run its prefill (the
+        admit cost IS the forward pass — prefill workers never decode),
+        and launch the KV payload toward the decode sub-fleet.  One
+        arrival per wake keeps sibling prefill workers draining a shared
+        channel in parallel instead of one worker hoarding a burst."""
+        rec, tracing = self._rec, self._rec.enabled
+        if len(chan) == 0:
+            self._clock[w] = t
+            return
+        arr, t = chan.pop(t, self.costs.t_dequeue_ns)
+        if arr is None:               # a sibling drained it first
+            self._clock[w] = t
+            return
+        if tracing:
+            rec.end(PID_REQUESTS, "queue", self._qkey(arr.rid), t,
+                    cat="queue")
+        ft = self._ft
+        t0 = t
+        if ft is not None and ft.attempts.get(arr.rid, 0) > 0 \
+                and hasattr(worker, "admit_retry_prefill"):
+            # crash-recovery redo: prompt + emitted prefix, so the KV
+            # payload carries everything the dead decode worker held
+            cost, h = worker.admit_retry_prefill(
+                arr, self._arrivals[arr.rid], ft.prefix_of(arr.rid)[1], t)
+        else:
+            cost, h = worker.admit_prefill(arr, t)
+        t += cost
+        if tracing:
+            rec.complete(PID_FLEET, TID_WORKER0 + w, "prefill", t0,
+                         t - t0, cat="admit", args={"rid": arr.rid})
+        self._launch_handoff(t, arr, h)
+        self._clock[w] = t
+        if len(chan) > 0:
+            self._wake(w, t)
+
+    def _launch_handoff(self, t: float, arr: Arrival, h: KVHandoff,
+                        dst_queue: Optional[int] = None) -> None:
+        """Ship one KV payload across the fabric: a ``handoff`` event
+        lands after the size-proportional transfer cost.  ``dst_queue``
+        pins the destination channel (live migration); None lets the
+        decode placement policy choose on landing."""
+        n = self._handoff_seq.get(arr.rid, 0) + 1
+        self._handoff_seq[arr.rid] = n
+        cost = (self.costs.t_handoff_base_ns
+                + h.kv_tokens * self.costs.t_handoff_per_token_ns)
+        self._handoffs += 1
+        self._kv_tokens_moved += h.kv_tokens
+        self._kv_bytes_moved += h.kv_bytes
+        m = self.metrics
+        m.counter("fleet.handoffs").inc()
+        m.counter("fleet.kv_tokens_moved").inc(h.kv_tokens)
+        m.counter("fleet.kv_bytes_moved").inc(h.kv_bytes)
+        if self._rec.enabled:
+            # keyed per launch (a session migrated repeatedly opens a
+            # fresh span each time — equal-timestamp key reuse breaks
+            # the async-span validator)
+            self._rec.begin(PID_REQUESTS, "handoff", f"{arr.rid}h{n}", t,
+                            cat="handoff",
+                            args={"rid": arr.rid, "kv_tokens": h.kv_tokens,
+                                  "kv_bytes": h.kv_bytes})
+        self._push(t + cost, "handoff", (arr, h, n, dst_queue))
+
+    def _on_handoff(self, t: float, data) -> None:
+        arr, h, n, dst_queue = data
+        if self._rec.enabled:
+            self._rec.end(PID_REQUESTS, "handoff", f"{arr.rid}h{n}", t,
+                          cat="handoff")
+        self._place_handoff(t, arr, h, dst_queue)
+
+    def _place_handoff(self, t: float, arr: Arrival, h: KVHandoff,
+                       dst_queue: Optional[int] = None) -> None:
+        """Land a KV payload on a decode channel (any channel on a
+        co-located fleet): park the payload for the admitting worker,
+        push the arrival, wake the group."""
+        pool = (self.plan.decode_queues if self.roles is not None
+                else list(range(len(self.channels))))
+        eligible = self._eligible_channels()
+        if eligible is not None:
+            live = set(eligible)
+            cands = [q for q in pool if q in live]
+        else:
+            cands = pool
+        if not cands:
+            # every decode worker is fenced: the cache has nowhere to
+            # land and a re-prefill could never decode either — fail
+            # definitively instead of stranding the payload
+            self._fail_request(t, arr.rid, "no_decode_workers")
+            return
+        if dst_queue is not None:
+            qid = (dst_queue if dst_queue in cands
+                   else cands[dst_queue % len(cands)])
+        else:
+            depths = [len(c) for c in self.channels]
+            loads = [self._channel_load(c) for c in self.channels]
+            policy = self._decode_policy or self.policy
+            qid = policy.choose(arr, depths, loads, cands)
+            if qid not in set(cands):
+                qid = cands[qid % len(cands)]
+        skey = f"{self._qkey(arr.rid)}h{self._handoff_seq[arr.rid]}"
+        self._handoff_payload[arr.rid] = (h, skey)
+        released = self.channels[qid].push(t, arr, self.costs.t_enqueue_ns)
+        if self._rec.enabled:
+            self._rec.begin(PID_REQUESTS, "queue", skey, t, cat="queue",
+                            args={"queue": qid, "handoff": True})
+        for w in self.channels[qid].workers:
+            self._wake(w, max(released, self._clock[w]))
+
+    def _fail_request(self, t: float, rid: int, reason: str) -> None:
+        """Terminal failure outside the retry machinery (no live
+        prefill / decode sub-fleet left): close the ledgers so the
+        report and the exactly-once client both see a definite end."""
+        self._handoff_payload.pop(rid, None)
+        if self._ft is not None and rid not in self._ft.failed:
+            self._ft.failed.append(rid)
+        self.metrics.counter("fleet.failed").inc()
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "fail", t,
+                              cat="fault",
+                              args={"rid": rid, "reason": reason})
+            self._rec.end(PID_REQUESTS, "request", rid, t,
+                          args={"failed": True})
+
+    def _on_migrate(self, t: float, data) -> None:
+        """Scheduled decode→decode live migration: strip every live
+        session off ``src`` and re-ship each as a KV handoff bound for
+        ``dst``'s channel — no token dropped, no prefill redone (the
+        PR 5 drain path, now with the cache travelling along)."""
+        src, dst = data
+        ft = self._ft
+        if ft is not None and (ft.fenced(src) or ft.fenced(dst)):
+            return                 # a dead endpoint voids the migration
+        self._migrations += 1
+        self.metrics.counter("fleet.migrations").inc()
+        tm = max(t, self._clock[src])
+        export = getattr(self.workers[src], "export_sessions", None)
+        handoffs = export() if export is not None else []
+        if self._rec.enabled:
+            self._rec.instant(PID_FLEET, TID_ROUTER, "migrate", tm,
+                              cat="handoff",
+                              args={"src": src, "dst": dst,
+                                    "sessions": len(handoffs)})
+        dstq = self.plan.queue_of(dst)
+        for h in handoffs:
+            self._launch_handoff(tm, self._arrivals[h.rid], h,
+                                 dst_queue=dstq)
+        self._wake(src, tm)
 
     # ----- chaos: fault injection + crash recovery (DESIGN.md §15) --------
     def _splice_completions(self, done: List[Completion]
@@ -912,9 +1357,24 @@ class Router:
             for arr in chan.drain():
                 if self._rec.enabled:
                     self._rec.end(PID_REQUESTS, "queue",
-                                  self._qkey(arr.rid), t, cat="queue")
-                self._lost.setdefault(w, []).append(
-                    LostWork(rid=arr.rid))
+                                  self._queue_span_key(arr.rid), t,
+                                  cat="queue")
+                # a KV payload stranded on the dead channel is lost with
+                # it — but its emitted prefix survives in the LostWork,
+                # so the re-prefill on a survivor resumes bit-exactly
+                entry = self._handoff_payload.pop(arr.rid, None)
+                lw = LostWork(rid=arr.rid)
+                if entry is not None:
+                    h0 = entry[0]
+                    done = max(0, h0.pos
+                               - self._arrivals[arr.rid].prompt_len)
+                    if h0.emitted:
+                        lw = LostWork(rid=arr.rid,
+                                      emitted=len(h0.emitted),
+                                      tokens=list(h0.emitted))
+                    elif done:
+                        lw = LostWork(rid=arr.rid, emitted=done)
+                self._lost.setdefault(w, []).append(lw)
         for lw in self._lost.pop(w, []):
             ft.note_lost(lw)
             self._schedule_retry(t, lw.rid)
@@ -1132,10 +1592,11 @@ class Router:
             if self._rec.enabled:
                 for arr in pending:
                     self._rec.end(PID_REQUESTS, "queue",
-                                  self._qkey(arr.rid), t, cat="queue")
+                                  self._queue_span_key(arr.rid), t,
+                                  cat="queue")
             self._lock_wait_retired += sum(
                 c.stats["lock_wait_ns"] for c in self.channels)
-            self.plan = DispatchPlan(new.channels, n)
+            self.plan = self._build_plan(new.channels, n)
             self._chan_epoch += 1
             self.channels = [DispatchChannel(q, self.plan.workers_of(q),
                                              recorder=self._rec)
@@ -1147,7 +1608,13 @@ class Router:
                                          TID_CHANNEL0 + c.cid,
                                          f"channel {c.cid}")
             for arr in pending:
-                self._place(t, arr)
+                # a drained KV payload re-lands on the NEW decode
+                # channel set; plain arrivals take the normal path
+                entry = self._handoff_payload.pop(arr.rid, None)
+                if entry is not None:
+                    self._place_handoff(t, arr, entry[0])
+                else:
+                    self._place(t, arr)
         if new.slots != old.slots:
             for w in self.workers:
                 w.regroup(slot_level=new.slots)
@@ -1197,6 +1664,8 @@ class Router:
                 self._push(t, "fault", spec)
         if self._ft is not None and self._heap:
             self._push(self._ft.policy.heartbeat_ns, "probe", None)
+        for t_mig, src, dst in self.migrations:
+            self._push(t_mig, "migrate", (src, dst))
         while self._heap:
             t, _, kind, data = heapq.heappop(self._heap)
             self._events += 1
@@ -1210,6 +1679,10 @@ class Router:
                 self._on_probe(t)
             elif kind == "retry":
                 self._on_retry(t, data)
+            elif kind == "handoff":
+                self._on_handoff(t, data)
+            elif kind == "migrate":
+                self._on_migrate(t, data)
             elif kind == "restore":
                 w, pages = data
                 pool = getattr(self.workers[w], "page_pool", None)
@@ -1280,6 +1753,11 @@ class Router:
                                  if self._ft is not None else []),
             duplicate_completions=(self._ft.duplicates
                                    if self._ft is not None else 0),
+            roles=self.roles,
+            handoffs=self._handoffs,
+            kv_tokens_moved=self._kv_tokens_moved,
+            kv_bytes_moved=self._kv_bytes_moved,
+            migrations=self._migrations,
         )
 
 
@@ -1292,7 +1770,9 @@ def build_sim_fleet(n_workers: int, sharing, *,
                     page_budget: Optional[int] = None,
                     obs: Optional[Observability] = None,
                     faults=None,
-                    recovery: Optional[RecoveryPolicy] = None) -> Router:
+                    recovery: Optional[RecoveryPolicy] = None,
+                    roles=None,
+                    migrations: Optional[List] = None) -> Router:
     """The bench/test entrypoint: N virtual workers behind a router.
 
     ``sharing`` follows ``Router``: a ``Category`` (historical — dispatch
@@ -1311,6 +1791,8 @@ def build_sim_fleet(n_workers: int, sharing, *,
         if sharing.page_budget is not None and page_budget is None:
             page_budget = sharing.page_budget
         max_len = sharing.max_len
+        if roles is None:
+            roles = sharing.role_split
         sharing = sharing.vector
     if isinstance(sharing, SharingVector):
         slot_level = sharing.slots
@@ -1322,4 +1804,5 @@ def build_sim_fleet(n_workers: int, sharing, *,
                for w in range(n_workers)]
     return Router(workers, sharing, placement=placement, costs=costs,
                   adapt=adapt, adapt_window_ns=adapt_window_ns, obs=obs,
-                  faults=faults, recovery=recovery)
+                  faults=faults, recovery=recovery, roles=roles,
+                  migrations=migrations)

@@ -52,6 +52,18 @@ class Arrival:
         return self.prompt_len + self.max_new_tokens
 
 
+def _check_counts(**counts) -> None:
+    """Generator-argument validation shared by all four shapes: request
+    counts must be non-negative (zero is a graceful empty trace), burst
+    sizes strictly positive (they divide)."""
+    for name, value in counts.items():
+        if name == "burst_size":
+            if value < 1:
+                raise ValueError(f"burst_size must be >= 1, got {value}")
+        elif value < 0:
+            raise ValueError(f"{name} must be >= 0, got {value}")
+
+
 def _draw(rng, rid, t, prompt_lens, new_tokens, session=-1) -> Arrival:
     lo, hi = new_tokens
     return Arrival(rid=rid, t_ns=float(t),
@@ -66,6 +78,7 @@ def poisson_trace(n_requests: int, *,
                   new_tokens: Tuple[int, int] = (4, 16),
                   seed: int = 0) -> List[Arrival]:
     """Open-loop Poisson arrivals: exponential inter-arrival gaps."""
+    _check_counts(n_requests=n_requests)
     rng = np.random.default_rng(seed)
     out, t = [], 0.0
     for rid in range(n_requests):
@@ -84,6 +97,7 @@ def bursty_trace(n_requests: int, *,
     ``burst_gap_ns``.  Request sizes inside a burst are deliberately
     heterogeneous (wide ``new_tokens`` spread) so blind per-worker
     placement strands short requests behind long ones."""
+    _check_counts(n_requests=n_requests, burst_size=burst_size)
     rng = np.random.default_rng(seed)
     out = []
     for rid in range(n_requests):
@@ -101,6 +115,8 @@ def session_trace(n_sessions: int, turns_per_session: int, *,
     """Session replay: each session issues ``turns_per_session`` turns
     separated by an exponential think time; sessions start staggered.
     Turns of one session share its ``session`` id (affinity key)."""
+    _check_counts(n_sessions=n_sessions,
+                  turns_per_session=turns_per_session)
     rng = np.random.default_rng(seed)
     out, rid = [], 0
     for s in range(n_sessions):
@@ -149,6 +165,8 @@ def phased_trace(requests_per_phase: int = 24, *,
     footprint waste.  Returns ``(arrivals, phases)``; arrivals are
     sorted by ``(t_ns, rid)`` and phases partition the arrival span.
     """
+    _check_counts(requests_per_phase=requests_per_phase,
+                  burst_size=burst_size)
     rng = np.random.default_rng(seed)
     out: List[Arrival] = []
     phases: List[Phase] = []

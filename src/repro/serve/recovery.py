@@ -95,9 +95,16 @@ class LostWork:
 class RecoveryManager:
     """All mutable fault-tolerance state for one Router run."""
 
-    def __init__(self, policy: RecoveryPolicy, n_workers: int):
+    def __init__(self, policy: RecoveryPolicy, n_workers: int,
+                 critical=None):
         self.policy = policy
         self.n_workers = n_workers
+        #: the worker subset new arrivals cannot be served without —
+        #: under prefill/decode disaggregation (DESIGN.md §17) that is
+        #: the PREFILL sub-fleet (a fresh prompt needs a prefill worker
+        #: even while decode workers live); None = any worker will do
+        self.critical: Optional[Tuple[int, ...]] = (
+            tuple(critical) if critical is not None else None)
         self.beats = [0.0] * n_workers            # last proof of life
         self.dead: List[Optional[float]] = [None] * n_workers
         self.detected: List[Optional[float]] = [None] * n_workers
@@ -172,7 +179,9 @@ class RecoveryManager:
     def shed_reason(self, arrival, t: float,
                     outstanding: int) -> Optional[str]:
         """Why this arrival must be shed BEFORE acceptance, or None."""
-        if all(self.is_detected(w) for w in range(self.n_workers)):
+        pool = (self.critical if self.critical is not None
+                else range(self.n_workers))
+        if all(self.is_detected(w) for w in pool):
             return "no_workers"
         if arrival.deadline_ns >= 0 and t > arrival.deadline_ns:
             return "deadline"

@@ -1,0 +1,405 @@
+"""Prefill/decode disaggregation (DESIGN.md §17): role topologies, KV
+handoff over the fabric, decode→decode live migration, the placement
+fixes the role split exposed (sticky session affinity, fenced-load
+exclusion), and traffic-generator argument validation.
+
+The acceptance spine: a ``2P+2D`` fleet serves the canonical session
+trace with token streams BIT-IDENTICAL to the co-located 4-worker fleet
+(prefill is compute-placement-invariant: greedy argmax is a pure
+function of the context, and exact-length batch-1 prefill matches the
+bucketed admission path bit-for-bit), and a mid-stream decode→decode
+migration drops and duplicates zero tokens.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core.endpoints import Category
+from repro.core.plan import EndpointPlan, SharingVector, parse_roles
+from repro.serve.fabric import (RoleDispatchPlan, Router, build_sim_fleet,
+                                bursty_trace, parse_faults, poisson_trace,
+                                session_trace)
+from repro.serve.fabric.traffic import phased_trace
+from repro.serve.recovery import RecoveryPolicy
+
+AFFINITY_GOLDEN = pathlib.Path(__file__).parent / "golden" / \
+    "affinity_pins.json"
+
+
+# ----- roles grammar / plan validation -------------------------------------
+
+def test_parse_roles_grammar():
+    assert parse_roles(None) is None
+    assert parse_roles("2P+2D") == (2, 2)
+    assert parse_roles("1p+3d") == (1, 3)
+    assert parse_roles(" 3P + 1D ") == (3, 1)
+    assert parse_roles((2, 6)) == (2, 6)
+    for bad in ("2P", "2D+2P", "P+D", "0P+4D", "", "2P+2D+1X"):
+        with pytest.raises(ValueError):
+            parse_roles(bad)
+
+
+def test_plan_roles_validation():
+    ok = EndpointPlan(vector=SharingVector(slots=1, channels=1, execs=4),
+                      n_workers=4, roles="2P+2D")
+    assert ok.role_split == (2, 2)
+    with pytest.raises(ValueError, match="need exactly"):
+        EndpointPlan(vector=SharingVector(slots=1, channels=1, execs=4),
+                     n_workers=4, roles="3P+3D")
+    with pytest.raises(ValueError, match="fleet"):
+        EndpointPlan(vector=SharingVector(), n_workers=2,
+                     executor="continuous", roles="1P+1D")
+
+
+def test_role_dispatch_plan_partitions():
+    """Prefill queues come first, decode queues after; every worker
+    drains exactly one queue of its own role."""
+    plan = RoleDispatchPlan(Category.SHARED_DYNAMIC, 2, 4)
+    assert plan.n_queues == len(plan.prefill_queues) \
+        + len(plan.decode_queues)
+    seen = []
+    for q in range(plan.n_queues):
+        for w in plan.workers_of(q):
+            assert plan.queue_of(w) == q
+            seen.append(w)
+    assert sorted(seen) == list(range(6))
+    assert [plan.role_of(w) for w in range(6)] \
+        == ["prefill"] * 2 + ["decode"] * 4
+    assert all(q in plan.prefill_queues or q in plan.decode_queues
+               for q in range(plan.n_queues))
+
+
+# ----- sim fleet: topology + handoff accounting ----------------------------
+
+def test_colocated_default_is_bit_identical():
+    """roles=None must not move a single event: the disagg machinery is
+    structurally absent from the default fleet."""
+    trace = bursty_trace(48, burst_size=7, seed=5)
+    a = build_sim_fleet(4, Category.SHARED_DYNAMIC).run(trace)
+    b = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles=None).run(trace)
+    assert a.roles is None and a.handoffs == 0 and a.kv_bytes_moved == 0
+    assert a.makespan_ns == b.makespan_ns
+    assert [(c.rid, c.worker, c.t_done_ns) for c in a.completions] \
+        == [(c.rid, c.worker, c.t_done_ns) for c in b.completions]
+
+
+def test_disagg_sim_conservation_and_roles():
+    """2P+2D: every request completes exactly once, every completion
+    carries exactly one handoff, prefill workers never decode."""
+    trace = session_trace(8, 4, seed=3)
+    router = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D")
+    rep = router.run(trace)
+    assert rep.roles == (2, 2)
+    assert sorted(c.rid for c in rep.completions) \
+        == sorted(a.rid for a in trace)
+    assert rep.handoffs == rep.n_completed
+    assert rep.kv_tokens_moved > 0 and rep.kv_bytes_moved > 0
+    # decode happens only on the decode sub-fleet; prefill workers still
+    # worked (their steps are prefill admissions, not decode steps)
+    assert all(c.worker >= 2 for c in rep.completions)
+    assert all(w.stats["admitted"] > 0 for w in router.workers[:2])
+
+
+def test_disagg_sim_deterministic():
+    trace = session_trace(6, 4, seed=9)
+    key = lambda rep: [(c.rid, c.worker, c.t_done_ns)
+                       for c in rep.completions]
+    a = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D").run(trace)
+    b = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D").run(trace)
+    assert key(a) == key(b) and a.makespan_ns == b.makespan_ns
+
+
+def test_roles_worker_count_mismatch_raises():
+    with pytest.raises(ValueError, match="need exactly"):
+        build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+3D")
+
+
+def test_handoff_cost_is_size_proportional():
+    """Longer prompts ship more KV: the handoff charge grows with the
+    resident tokens, so makespan orders with prompt length."""
+    short = bursty_trace(12, burst_size=3, prompt_lens=(8,),
+                         new_tokens=(2, 2), seed=1)
+    long = bursty_trace(12, burst_size=3, prompt_lens=(96,),
+                        new_tokens=(2, 2), seed=1)
+    rs = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D").run(short)
+    rl = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D").run(long)
+    assert rl.kv_tokens_moved > rs.kv_tokens_moved
+    assert rl.kv_bytes_moved > rs.kv_bytes_moved
+
+
+# ----- sim fleet: decode→decode migration ----------------------------------
+
+def test_sim_migration_conserves_tokens():
+    """A live migration moves sessions, never requests: the completion
+    set and per-request token counts match the unmigrated run."""
+    trace = bursty_trace(16, burst_size=4, new_tokens=(6, 12), seed=2)
+    base = build_sim_fleet(4, Category.SHARED_DYNAMIC).run(trace)
+    mig = build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                          migrations=[(150_000.0, 0, 2)]).run(trace)
+    assert mig.migrations == 1
+    assert {c.rid: c.new_tokens for c in mig.completions} \
+        == {c.rid: c.new_tokens for c in base.completions}
+    # migrated sessions really moved (handoffs happened)
+    assert mig.handoffs > 0
+
+
+def test_migration_validation():
+    with pytest.raises(ValueError, match="bad migration"):
+        build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                        migrations=[(1.0, 0, 9)])
+    with pytest.raises(ValueError, match="bad migration"):
+        build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                        migrations=[(1.0, 1, 1)])
+    with pytest.raises(ValueError, match="decode"):
+        # under roles, migration sources/destinations are decode workers
+        build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D",
+                        migrations=[(1.0, 0, 3)])
+
+
+# ----- fault tolerance meets disaggregation --------------------------------
+
+def test_decode_crash_reprefills_on_survivor():
+    """Kill a decode worker mid-run under 2P+2D: its resident (handed
+    off) sessions re-prefill and complete on the surviving decode
+    worker, exactly once."""
+    trace = bursty_trace(12, burst_size=4, new_tokens=(8, 16), seed=4)
+    rep = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D",
+                          faults=parse_faults("crash@200us:w2"),
+                          recovery=RecoveryPolicy()).run(trace)
+    assert rep.detections >= 1 and rep.retries >= 1
+    assert rep.duplicate_completions == 0
+    assert sorted(c.rid for c in rep.completions) \
+        == sorted(a.rid for a in trace)
+    assert all(c.worker == 3 for c in rep.completions
+               if c.t_done_ns > 300_000.0)
+
+
+def test_prefill_crash_keeps_serving():
+    """Kill one of two prefill workers: the survivor carries every
+    remaining prefill; nothing is lost."""
+    trace = bursty_trace(12, burst_size=4, new_tokens=(4, 8), seed=6)
+    rep = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D",
+                          faults=parse_faults("crash@150us:w0"),
+                          recovery=RecoveryPolicy()).run(trace)
+    assert rep.duplicate_completions == 0
+    assert sorted(c.rid for c in rep.completions) \
+        == sorted(a.rid for a in trace)
+
+
+def test_all_prefill_dead_sheds_new_arrivals():
+    """With the whole prefill sub-fleet fenced, fresh prompts cannot be
+    served even though decode workers live: they shed as accounted
+    losses instead of hanging."""
+    trace = bursty_trace(12, burst_size=3, burst_gap_ns=400_000.0,
+                         new_tokens=(4, 8), seed=7)
+    rep = build_sim_fleet(4, Category.SHARED_DYNAMIC, roles="2P+2D",
+                          faults=parse_faults(
+                              "crash@50us:w0,crash@50us:w1"),
+                          recovery=RecoveryPolicy()).run(trace)
+    lost = {rid for rid, _, _ in rep.shed} | set(rep.failed)
+    done = {c.rid for c in rep.completions}
+    assert lost and not (lost & done)
+    assert lost | done == {a.rid for a in trace}
+
+
+# ----- placement fixes the role split exposed ------------------------------
+
+def test_fenced_channel_load_excluded():
+    """The headline load-accounting fix: with 2 workers per channel and
+    one crashed, least_loaded must not see the dead worker's stranded
+    in-flight count as live load — the surviving member's channel keeps
+    receiving its fair share instead of being shunned."""
+    trace = bursty_trace(32, burst_size=4, burst_gap_ns=250_000.0,
+                         new_tokens=(6, 12), seed=8)
+    rep = build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                          placement="least_loaded",
+                          faults=parse_faults("crash@100us:w0"),
+                          recovery=RecoveryPolicy()).run(trace)
+    assert sorted(c.rid for c in rep.completions) \
+        == sorted(a.rid for a in trace)
+    # worker 1 (the crashed worker's channel-mate) keeps serving: if the
+    # fenced load were still counted, channel 0 would look permanently
+    # loaded and starve
+    late = [c for c in rep.completions if c.t_done_ns > 600_000.0]
+    assert any(c.worker == 1 for c in late), \
+        [(c.worker, c.t_done_ns) for c in late]
+
+
+def test_session_affinity_survives_crash():
+    """Property: fencing one channel re-pins ONLY the sessions that
+    lived there; every other session keeps its first-seen channel for
+    the whole faulted run."""
+    trace = session_trace(8, 4, seed=5)
+    router = build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                             placement="session_affinity",
+                             faults=parse_faults("crash@300us:w0"),
+                             recovery=RecoveryPolicy())
+    rep = router.run(trace)
+    arrivals = {a.rid: a for a in trace}
+    polled = {}
+    for c in sorted(rep.completions, key=lambda c: arrivals[c.rid].t_ns):
+        s = arrivals[c.rid].session
+        polled.setdefault(s, []).append(router.plan.queue_of(c.worker))
+    dead_chan = router.plan.queue_of(0)
+    for s, chans in polled.items():
+        homes = sorted(set(chans))
+        if dead_chan in chans:
+            # a session that lived on the fenced channel moves AT MOST
+            # once, to one new sticky home
+            assert len(homes) <= 2, (s, chans)
+        else:
+            assert len(homes) == 1, f"unaffected session {s} moved: {chans}"
+
+
+def test_session_affinity_survives_replan():
+    """Property: a channel-count replan keeps every session whose pinned
+    channel survives on that channel (the old modulo map reshuffled all
+    of them)."""
+    from repro.serve.fabric.placement import SessionAffinity
+
+    pol = SessionAffinity()
+
+    class A:
+        def __init__(self, s):
+            self.session = s
+
+    # pin 6 sessions across 4 channels
+    first = {s: pol.choose(A(s), [0] * 4, [0] * 4) for s in range(6)}
+    # replan shrinks to 3 channels: pins on channels 0..2 must not move
+    for s in range(6):
+        q = pol.choose(A(s), [0] * 3, [0] * 3)
+        if first[s] < 3:
+            assert q == first[s], (s, first[s], q)
+        else:
+            assert 0 <= q < 3
+    # ...and the re-pin is itself sticky
+    moved = {s for s in range(6) if first[s] >= 3}
+    again = {s: pol.choose(A(s), [9] * 3, [9] * 3) for s in moved}
+    third = {s: pol.choose(A(s), [1] * 3, [1] * 3) for s in moved}
+    assert again == third
+
+
+def test_affinity_warm_rate_golden(request):
+    """The canonical session trace under sticky affinity: every repeat
+    turn lands on its session's pinned channel (warm rate 1.0), and the
+    pin map is committed as a golden so a placement change cannot slip
+    through silently.  --regen-goldens rewrites it."""
+    trace = session_trace(6, 4, seed=2)
+    router = build_sim_fleet(4, Category.SHARED_DYNAMIC,
+                             placement="session_affinity")
+    rep = router.run(trace)
+    arrivals = {a.rid: a for a in trace}
+    home, turns, warm = {}, 0, 0
+    for c in sorted(rep.completions, key=lambda c: arrivals[c.rid].t_ns):
+        s = arrivals[c.rid].session
+        q = router.plan.queue_of(c.worker)
+        if s in home:
+            turns += 1
+            warm += int(q == home[s])
+        else:
+            home[s] = q
+    assert turns and warm == turns, f"warm rate {warm}/{turns}"
+    record = {"trace": "session_trace(6, 4, seed=2)",
+              "pins": {str(s): q for s, q in sorted(home.items())},
+              "warm_rate": 1.0}
+    if request.config.getoption("--regen-goldens"):
+        AFFINITY_GOLDEN.write_text(json.dumps(record, indent=1,
+                                              sort_keys=True) + "\n")
+        return
+    if not AFFINITY_GOLDEN.exists():
+        pytest.fail(f"{AFFINITY_GOLDEN} missing — run --regen-goldens")
+    assert record == json.loads(AFFINITY_GOLDEN.read_text())
+
+
+# ----- traffic-generator argument validation -------------------------------
+
+def test_traffic_count_validation():
+    """All four generators reject nonsensical shapes loudly instead of
+    crashing later (burst_size=0 divided; negatives silently produced
+    empty traces)."""
+    with pytest.raises(ValueError, match="n"):
+        poisson_trace(-1)
+    with pytest.raises(ValueError, match="burst_size"):
+        bursty_trace(8, burst_size=0)
+    with pytest.raises(ValueError, match="n"):
+        bursty_trace(-4)
+    with pytest.raises(ValueError, match="n_sessions"):
+        session_trace(-1, 4)
+    with pytest.raises(ValueError, match="turns"):
+        session_trace(4, -2)
+    with pytest.raises(ValueError):
+        phased_trace(-5)
+    # zero requests is a valid (empty) trace everywhere
+    assert poisson_trace(0) == []
+    assert session_trace(0, 4) == []
+
+
+# ----- real-engine acceptance ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    return cfg, Model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _engine_fleet(served, n=4, roles=None, migrations=None, **ekw):
+    from repro.serve.engine import ContinuousEngine
+    from repro.serve.fabric import EngineWorker
+
+    cfg, params = served
+    ws = [EngineWorker(w, ContinuousEngine(cfg, params, n_slots=2,
+                                           max_len=64, **ekw),
+                       vocab=cfg.vocab) for w in range(n)]
+    return Router(ws, Category.SHARED_DYNAMIC, roles=roles,
+                  migrations=migrations)
+
+
+def _streams(rep):
+    return {c.rid: tuple(c.output or ()) for c in rep.completions}
+
+
+def test_engine_disagg_bit_identical_to_colocated(served):
+    """THE acceptance criterion: a 2P+2D real-engine fleet serves the
+    canonical session trace with every token stream bit-identical to the
+    co-located 4-worker fleet — the prefill moved machines and the KV
+    crossed the fabric, and no client can tell."""
+    trace = session_trace(2, 3, prompt_lens=(8, 16), new_tokens=(2, 5),
+                          seed=0)
+    base = _streams(_engine_fleet(served).run(trace))
+    rep = _engine_fleet(served, roles="2P+2D").run(trace)
+    assert rep.roles == (2, 2)
+    assert rep.handoffs == len(trace)
+    assert rep.kv_bytes_moved > 0
+    assert _streams(rep) == base
+
+
+def test_engine_live_migration_drops_nothing(served):
+    """Mid-stream decode→decode migration: the moved sessions finish on
+    the destination with zero dropped or duplicated tokens — streams
+    bit-identical to the unmigrated run."""
+    trace = bursty_trace(6, burst_size=3, prompt_lens=(8, 16),
+                         new_tokens=(4, 8), seed=1)
+    base = _streams(_engine_fleet(served).run(trace))
+    rep = _engine_fleet(served,
+                        migrations=[(120_000.0, 0, 2)]).run(trace)
+    assert rep.migrations == 1
+    assert _streams(rep) == base
+
+
+def test_engine_disagg_migration_compose(served):
+    """Roles + migration together: prefill handoffs land on decode
+    workers, then one decode worker's sessions move again — still
+    bit-identical."""
+    trace = bursty_trace(6, burst_size=3, prompt_lens=(8, 16),
+                         new_tokens=(4, 8), seed=1)
+    base = _streams(_engine_fleet(served).run(trace))
+    rep = _engine_fleet(served, roles="2P+2D",
+                        migrations=[(150_000.0, 2, 3)]).run(trace)
+    assert rep.migrations == 1 and rep.handoffs >= len(trace)
+    assert _streams(rep) == base
